@@ -1,0 +1,68 @@
+"""Fig. 6: P2P-SPIN vs Cen-SPIN vs Multi-SPIN maximum sum goodput."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.channel import ChannelState
+from repro.core.draft_control import (
+    solve_centralized,
+    solve_heterogeneous,
+    solve_p2p,
+)
+
+from .common import (
+    FIG6_TARGETS,
+    K_DEFAULT,
+    load_calibration,
+    paper_channel,
+    paper_devices,
+)
+
+
+def run(fast: bool = True) -> list[dict]:
+    rows = []
+    n_seeds = 3 if fast else 10
+    for pair in ("llama2", "qwen35"):
+        calib = load_calibration()[pair]
+        cfg = paper_channel(pair)
+        Q, B = cfg.q_tok_bits, cfg.total_bandwidth_hz
+        K = K_DEFAULT
+        acc = {"multi": [], "cen": [], "p2p": []}
+        for seed in range(n_seeds):
+            rng = np.random.default_rng(seed)
+            tasks, alphas = paper_devices(pair, K, rng)
+            ch = ChannelState.sample(cfg, K, rng)
+            t_dev = rng.uniform(0.85, 1.15, K) * calib["T_S"]
+            T_ver = calib["t_fix"] + K * calib["t_lin"]
+            acc["multi"].append(
+                solve_heterogeneous(alphas, t_dev, ch.rates, Q, B, T_ver,
+                                    L_max=25).goodput)
+            acc["cen"].append(
+                solve_centralized(alphas, T_ver, calib["t_fix"] * 0.15,
+                                  calib["t_lin"] * 0.6, L_max=25).goodput)
+            acc["p2p"].append(
+                solve_p2p(alphas[0], t_dev[0], ch.rates[0], Q, B,
+                          calib["t_fix"] + calib["t_lin"], L_max=25).goodput)
+        means = {k: float(np.mean(v)) for k, v in acc.items()}
+        for proto in ("multi", "cen", "p2p"):
+            rows.append({
+                "name": f"protocols/{pair}/{proto}",
+                "us_per_call": "",
+                "derived": (f"goodput={means[proto]:.1f} "
+                            f"paper={FIG6_TARGETS[pair][proto]:.1f}"),
+                "goodput": means[proto],
+            })
+        rows.append({
+            "name": f"protocols/{pair}/ratios",
+            "us_per_call": "",
+            "derived": (f"multi/cen={means['multi'] / means['cen']:.2f} "
+                        f"(paper {'2.5' if pair == 'llama2' else '3.0'}) "
+                        f"multi/p2p={means['multi'] / means['p2p']:.2f}"),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], r["derived"])

@@ -1,0 +1,69 @@
+"""Fig. 5: batched verification latency vs batch size K, with affine fit.
+
+Measured by wall-clock on THIS backend (CPU stand-in for the A100): one
+batched forward_window of the smoke-scale target model at K = 1..K_max, then
+a least-squares fit of T_ver(K) = T_fix + K*T_lin.  The claim under test is
+the affine structure (R^2), not the absolute milliseconds.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+def run(fast: bool = True) -> list[dict]:
+    rows = []
+    for pair, target_arch in (("llama2", "llama2-7b"), ("qwen35", "qwen3.5-27b")):
+        cfg = get_config(target_arch).smoke().replace(num_layers=4, d_model=128,
+                                                      num_heads=4, num_kv_heads=2,
+                                                      head_dim=32, d_ff=256)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        L = 8
+        Ks = [1, 2, 4, 8, 12, 16] if fast else [1, 2, 4, 8, 12, 16, 20, 24]
+        lat = []
+        for K in Ks:
+            cache = model.init_cache(K, 64, jnp.float32)
+            tokens = jax.random.randint(jax.random.PRNGKey(1), (K, 16), 0,
+                                        cfg.vocab_size)
+            _, cache, _ = model.prefill(params, tokens, cache)
+            window = jax.random.randint(jax.random.PRNGKey(2), (K, L + 1), 0,
+                                        cfg.vocab_size)
+            pos = jnp.full((K,), 16, jnp.int32)
+            step = jax.jit(lambda p, w, c, q: model.forward_window(p, w, c, q)[0])
+            step(params, window, cache, pos).block_until_ready()  # compile
+            n_rep = 5
+            t0 = time.perf_counter()
+            for _ in range(n_rep):
+                step(params, window, cache, pos).block_until_ready()
+            lat.append((time.perf_counter() - t0) / n_rep)
+        Ks_np = np.array(Ks, float)
+        lat_np = np.array(lat)
+        A = np.stack([np.ones_like(Ks_np), Ks_np], axis=1)
+        (t_fix, t_lin), res, *_ = np.linalg.lstsq(A, lat_np, rcond=None)
+        ss_tot = np.sum((lat_np - lat_np.mean()) ** 2)
+        r2 = 1 - (res[0] / ss_tot if len(res) and ss_tot > 0 else 0.0)
+        for K, l in zip(Ks, lat):
+            rows.append({"name": f"tver_vs_K/{pair}/K={K}",
+                         "us_per_call": round(l * 1e6, 1),
+                         "derived": f"latency={l * 1e3:.2f}ms"})
+        rows.append({
+            "name": f"tver_vs_K/{pair}/fit",
+            "us_per_call": "",
+            "derived": (f"T_fix={t_fix * 1e3:.2f}ms T_lin={t_lin * 1e3:.3f}ms "
+                        f"R2={r2:.4f} affine_ok={r2 > 0.9}"),
+            "r2": float(r2),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], r["derived"])

@@ -1,0 +1,87 @@
+"""Generate PNG analogues of the paper's figures into experiments/figures/.
+
+  PYTHONPATH=src python -m benchmarks.make_figures
+"""
+
+from __future__ import annotations
+
+import os
+
+import matplotlib
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt
+import numpy as np
+
+FIG_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "figures")
+
+
+def fig3_goodput_vs_L():
+    from .bench_goodput_vs_L import run
+    fig, axes = plt.subplots(1, 2, figsize=(10, 4))
+    for ax, pair in zip(axes, ("llama2", "qwen35")):
+        rows = run(pair, fast=True)
+        summary = rows[-1]
+        Ls = np.arange(1, 26)
+        ax.plot(Ls, summary["curve_theory"], "-", label="theory (eq. 18)")
+        ax.plot(Ls, summary["curve_emp"], "o", ms=3, label="empirical")
+        ax.axvline(summary["L_star"], ls="--", c="gray",
+                   label=f"L* (Thm 1) = {summary['L_star']}")
+        ax.set_xlabel("draft length L")
+        ax.set_ylabel("sum goodput [tok/s]")
+        ax.set_title(f"Fig. 3 analogue — {pair}")
+        ax.legend()
+    fig.tight_layout()
+    fig.savefig(os.path.join(FIG_DIR, "fig3_goodput_vs_L.png"), dpi=120)
+
+
+def fig7_bandwidth_sweep():
+    from .bench_bandwidth_sweep import BUDGETS_MHZ, run
+    rows = run(fast=True)
+    fig, axes = plt.subplots(1, 2, figsize=(10, 4))
+    for ax, pair in zip(axes, ("llama2", "qwen35")):
+        data = {s: [] for s in ("hete", "uni-bw", "homo", "fixed")}
+        for r in rows:
+            if f"/{pair}/" in r["name"] and "B=" in r["name"]:
+                for s in data:
+                    data[s].append(r[s])
+        for s, vals in data.items():
+            ax.plot(BUDGETS_MHZ, vals, "o-", label=s)
+        ax.set_xscale("log")
+        ax.set_xlabel("bandwidth budget [MHz]")
+        ax.set_ylabel("sum goodput [tok/s]")
+        ax.set_title(f"Fig. 7 analogue — {pair}")
+        ax.legend()
+    fig.tight_layout()
+    fig.savefig(os.path.join(FIG_DIR, "fig7_bandwidth_sweep.png"), dpi=120)
+
+
+def fig8_scaling_K():
+    from .bench_scaling_K import K_RANGE, run
+    rows = run(fast=True)
+    fig, axes = plt.subplots(1, 2, figsize=(10, 4))
+    for ax, pair in zip(axes, ("llama2", "qwen35")):
+        hete, fixed = [], []
+        for r in rows:
+            if f"/{pair}/" in r["name"] and "K=" in r["name"]:
+                hete.append(r["hete"])
+                fixed.append(r["fixed"])
+        ax.plot(K_RANGE, hete, "o-", label="Hete-Multi-SPIN")
+        ax.plot(K_RANGE, fixed, "s-", label="Fixed BW&L")
+        ax.set_xlabel("devices K")
+        ax.set_ylabel("sum goodput [tok/s]")
+        ax.set_title(f"Fig. 8 analogue — {pair}")
+        ax.legend()
+    fig.tight_layout()
+    fig.savefig(os.path.join(FIG_DIR, "fig8_scaling_K.png"), dpi=120)
+
+
+def main():
+    os.makedirs(FIG_DIR, exist_ok=True)
+    fig3_goodput_vs_L()
+    fig7_bandwidth_sweep()
+    fig8_scaling_K()
+    print("figures written to", FIG_DIR)
+
+
+if __name__ == "__main__":
+    main()

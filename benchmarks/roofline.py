@@ -1,0 +1,51 @@
+"""Roofline table: reads experiments/dryrun/*.json into the §Roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(fast: bool = True) -> list[dict]:
+    rows = []
+    ok = err = 0
+    for c in load_cells():
+        if c.get("status") != "ok":
+            err += 1
+            rows.append({"name": f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+                         "us_per_call": "", "derived": f"ERROR {c.get('error')}"})
+            continue
+        ok += 1
+        r = c["roofline"]
+        mem = c.get("memory_analysis", {})
+        tot_gb = (mem.get("temp_size_in_bytes", 0)
+                  + mem.get("argument_size_in_bytes", 0)) / 1e9
+        rows.append({
+            "name": f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+            "us_per_call": "",
+            "derived": (f"bottleneck={r['bottleneck']} "
+                        f"frac={r['peak_fraction']:.3f} "
+                        f"c/m/n={r['compute_s']:.2e}/{r['memory_s']:.2e}/"
+                        f"{r['collective_s']:.2e} "
+                        f"flops_ratio={r['flops_ratio']:.2f} mem={tot_gb:.1f}GB"),
+            "roofline": r,
+        })
+    rows.append({"name": "roofline/summary", "us_per_call": "",
+                 "derived": f"cells_ok={ok} cells_err={err}"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], r["derived"])

@@ -1,0 +1,69 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--fast`` (default) keeps
+CPU runtimes small; ``--full`` uses paper-scale seeds/rounds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to run")
+    args = ap.parse_args()
+    fast = not args.full
+
+    from . import (
+        bench_acceptance,
+        bench_bandwidth_sweep,
+        bench_beyond,
+        bench_goodput_vs_L,
+        bench_optimal_L,
+        bench_protocols,
+        bench_scaling_K,
+        bench_tver_vs_K,
+        roofline,
+    )
+
+    benches = {
+        "acceptance": lambda: (bench_acceptance.run("llama2", fast)
+                               + bench_acceptance.run("qwen35", fast)),
+        "tver_vs_K": lambda: bench_tver_vs_K.run(fast),
+        "goodput_vs_L": lambda: (bench_goodput_vs_L.run("llama2", fast)
+                                 + bench_goodput_vs_L.run("qwen35", fast)),
+        "optimal_L": lambda: bench_optimal_L.run(fast),
+        "protocols": lambda: bench_protocols.run(fast),
+        "bandwidth_sweep": lambda: bench_bandwidth_sweep.run(fast),
+        "scaling_K": lambda: bench_scaling_K.run(fast),
+        "beyond": lambda: bench_beyond.run(fast),
+        "roofline": lambda: roofline.run(fast),
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        t0 = time.time()
+        try:
+            rows = benches[name]()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},,FAILED: {type(e).__name__}: {e}")
+            failures += 1
+            continue
+        for r in rows:
+            derived = str(r.get("derived", "")).replace(",", ";")
+            print(f"{r['name']},{r.get('us_per_call', '')},{derived}")
+        print(f"{name}/_wall,{round((time.time() - t0) * 1e6)},done",
+              file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

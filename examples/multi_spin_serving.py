@@ -1,0 +1,58 @@
+"""End-to-end Multi-SPIN serving with REAL models.
+
+K simulated edge devices each run a small draft LM; the server runs a larger
+target LM; every round the controller re-solves draft control from the
+current channel state, the engine drafts + batch-verifies on real weights,
+and goodput is accounted with the paper's latency model.
+
+  PYTHONPATH=src python examples/multi_spin_serving.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.channel import ChannelConfig
+from repro.core.controller import MultiSpinController, VerificationLatencyModel
+from repro.core.protocol import DeviceProfile, MultiSpinProtocol
+from repro.serving import SpecEngine
+
+K, PROMPT_LEN, ROUNDS = 4, 12, 6
+rng = np.random.default_rng(0)
+
+# target: qwen2.5-3b family (reduced); draft: 1-layer sibling
+target_cfg = get_config("qwen2.5-3b").smoke().replace(
+    num_layers=4, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+    d_ff=256)
+draft_cfg = target_cfg.replace(num_layers=1, d_model=64, num_heads=2,
+                               num_kv_heads=1, head_dim=32, d_ff=128,
+                               name="draft")
+
+engine = SpecEngine(target_cfg, draft_cfg, max_len=256)
+engine.init_params(jax.random.PRNGKey(0))
+prompts = jax.random.randint(jax.random.PRNGKey(1), (K, PROMPT_LEN), 0,
+                             target_cfg.vocab_size)
+engine_state = engine.start(prompts)
+
+channel = ChannelConfig(vocab_size=target_cfg.vocab_size)
+controller = MultiSpinController(
+    scheme="hete", q_tok_bits=channel.q_tok_bits,
+    bandwidth_hz=channel.total_bandwidth_hz,
+    t_ver_model=VerificationLatencyModel(0.035, 0.0177), L_max=8)
+devices = [DeviceProfile(T_S=0.009 * f, alpha=0.8, task="mixed")
+           for f in rng.uniform(0.85, 1.15, K)]
+
+proto = MultiSpinProtocol(controller, channel, devices, rng, engine=engine,
+                          engine_state=engine_state, use_estimator=True)
+
+print(f"serving {K} devices, target={target_cfg.name}, draft={draft_cfg.name}")
+for i in range(ROUNDS):
+    rec = proto.run_round()
+    print(f"round {i}: L={rec.lengths} accepted={rec.accepted} "
+          f"goodput={rec.realized_goodput:.1f} tok/s  "
+          f"alpha_hat={np.round(proto.estimator.alpha_hat, 2)}")
+
+print("\nfinal stream lengths:",
+      [len(c) for c in proto.engine_state.committed])
+print("summary:", {k: round(v, 2) if isinstance(v, float) else v
+                   for k, v in proto.summary().items()})

@@ -1,0 +1,57 @@
+"""Quickstart: solve multi-access draft control and run a Multi-SPIN round.
+
+Runs in seconds on CPU.  Demonstrates the paper's full control loop:
+channel sampling -> draft-length + bandwidth optimization (Algorithm 1) ->
+a simulated Multi-SPIN round with realized goodput.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.channel import ChannelConfig
+from repro.core.controller import MultiSpinController, VerificationLatencyModel
+from repro.core.protocol import DeviceProfile, MultiSpinProtocol
+
+K = 12
+rng = np.random.default_rng(0)
+
+# 1. a heterogeneous edge cell: four task types (paper Table I) and +-15%
+#    device compute spread
+alphas = {"mbpp": 0.8582, "gsm8k": 0.7390, "mtbench": 0.7393, "squad": 0.7126}
+tasks = rng.choice(list(alphas), K)
+devices = [DeviceProfile(T_S=0.009 * f, alpha=alphas[t], task=t)
+           for f, t in zip(rng.uniform(0.85, 1.15, K), tasks)]
+
+# 2. the server-side controller (Algorithm 1: heterogeneous lengths)
+channel = ChannelConfig()
+controller = MultiSpinController(
+    scheme="hete",
+    q_tok_bits=channel.q_tok_bits,
+    bandwidth_hz=channel.total_bandwidth_hz,
+    t_ver_model=VerificationLatencyModel(t_fix=0.035, t_lin=0.0177),
+)
+
+# 3. run 20 rounds
+proto = MultiSpinProtocol(controller, channel, devices, rng)
+for i in range(20):
+    rec = proto.run_round()
+    if i < 3 or i == 19:
+        print(f"round {i:2d}: L={rec.lengths} "
+              f"goodput={rec.realized_goodput:6.1f} tok/s "
+              f"(predicted {rec.predicted_goodput:6.1f})")
+
+summary = proto.summary()
+print(f"\n{summary['rounds']} rounds, {summary['tokens']:.0f} tokens, "
+      f"sum goodput {summary['goodput']:.1f} tok/s")
+
+# 4. compare against the heterogeneity-agnostic baseline
+proto_fixed = MultiSpinProtocol(
+    MultiSpinController(scheme="fixed", q_tok_bits=channel.q_tok_bits,
+                        bandwidth_hz=channel.total_bandwidth_hz,
+                        t_ver_model=VerificationLatencyModel(0.035, 0.0177)),
+    channel, devices, np.random.default_rng(0))
+fixed = proto_fixed.run(20)
+print(f"fixed BW&L baseline: {fixed['goodput']:.1f} tok/s "
+      f"(+{100 * (summary['goodput'] / fixed['goodput'] - 1):.0f}% from joint "
+      f"draft control)")

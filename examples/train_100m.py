@@ -1,0 +1,73 @@
+"""Train a ~100M-parameter LM for a few hundred steps on synthetic data.
+
+Exercises the full training substrate end-to-end on CPU: model zoo config,
+synthetic Markov data, AdamW + schedule, microbatched train step,
+checkpoint/restart.  The loss demonstrably decreases (the data has learnable
+bigram structure).
+
+  PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.models import build_model
+from repro.training import (
+    DataConfig,
+    OptimizerConfig,
+    SyntheticLMDataset,
+    init_optimizer,
+    make_train_step,
+)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_100m")
+args = ap.parse_args()
+
+# ~100M params: a narrow tinyllama-family config
+cfg = get_config("tinyllama-1.1b").replace(
+    name="tinyllama-100m", num_layers=8, d_model=640, num_heads=10,
+    num_kv_heads=2, head_dim=64, d_ff=1792, vocab_size=8192)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+n_params = model.num_params(params)
+print(f"model: {cfg.name}  params: {n_params / 1e6:.1f}M")
+
+opt_cfg = OptimizerConfig(learning_rate=1e-3, warmup_steps=20,
+                          decay_steps=args.steps)
+opt_state = init_optimizer(opt_cfg, params)
+data = SyntheticLMDataset(DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
+                                     global_batch=8))
+step_fn = jax.jit(make_train_step(model, opt_cfg, microbatches=2))
+mgr = CheckpointManager(args.ckpt_dir, keep=2)
+
+# resume if a checkpoint exists
+start = 0
+restored = mgr.restore_latest({"params": params, "opt": opt_state})
+if restored is not None:
+    tree, meta = restored
+    params, opt_state = tree["params"], tree["opt"]
+    start = meta["step"]
+    print(f"resumed from step {start}")
+
+t0 = time.time()
+for step in range(start, args.steps):
+    batch = {"tokens": jnp.asarray(data.batch(step)["tokens"])}
+    params, opt_state, metrics = step_fn(params, opt_state, batch)
+    if step % 25 == 0 or step == args.steps - 1:
+        print(f"step {step:4d}  loss={float(metrics['loss']):.4f}  "
+              f"lr={float(metrics['lr']):.2e}  "
+              f"gnorm={float(metrics['grad_norm']):.2f}  "
+              f"{(time.time() - t0):.0f}s")
+    if step and step % 100 == 0:
+        mgr.save_async(step, {"params": params, "opt": opt_state})
+
+mgr.wait()
+mgr.save(args.steps, {"params": params, "opt": opt_state})
+print("done; checkpoints:", mgr.steps())

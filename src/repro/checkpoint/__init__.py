@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing (msgpack + zstd, atomic, async)."""
+
+from .checkpoint import CheckpointManager, load, save  # noqa: F401

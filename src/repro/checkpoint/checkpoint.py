@@ -1,0 +1,149 @@
+"""Fault-tolerant pytree checkpointing.
+
+Format: one msgpack blob (zstd-compressed) holding flattened key-paths ->
+{dtype, shape, raw bytes}, plus a manifest with a SHA-256 content hash and
+user metadata.  Writes are crash-safe: tmp file + fsync + atomic rename; a
+half-written checkpoint can never shadow a good one.  ``CheckpointManager``
+retains the newest ``keep`` checkpoints, restores the latest VALID one
+(corrupt trailers are detected by hash and skipped), and supports an async
+writer thread so the training loop never blocks on storage.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+Params = Any
+
+_MAGIC = b"REPRO_CKPT1"
+
+
+def _flatten(tree: Params) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_into(template: Params, arrays: dict[str, np.ndarray]) -> Params:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+
+
+def save(path: str, tree: Params, metadata: dict | None = None):
+    arrays = _flatten(tree)
+    payload = {
+        "arrays": {
+            k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                "data": v.tobytes()}
+            for k, v in arrays.items()
+        },
+        "metadata": metadata or {},
+    }
+    blob = zstandard.ZstdCompressor(level=3).compress(
+        msgpack.packb(payload, use_bin_type=True))
+    digest = hashlib.sha256(blob).digest()
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(_MAGIC)
+        f.write(digest)
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def load(path: str, template: Params):
+    """Restore into the structure/dtypes of ``template``.  Raises on
+    corruption (bad magic or hash)."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    if raw[:len(_MAGIC)] != _MAGIC:
+        raise ValueError(f"{path}: bad magic")
+    digest, blob = raw[len(_MAGIC):len(_MAGIC) + 32], raw[len(_MAGIC) + 32:]
+    if hashlib.sha256(blob).digest() != digest:
+        raise ValueError(f"{path}: content hash mismatch (corrupt)")
+    payload = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(blob),
+                              raw=False)
+    arrays = {
+        k: np.frombuffer(v["data"], dtype=np.dtype(v["dtype"])).reshape(v["shape"])
+        for k, v in payload["arrays"].items()
+    }
+    return _unflatten_into(template, arrays), payload["metadata"]
+
+
+class CheckpointManager:
+    """Step-indexed checkpoint directory with retention + async writes."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:010d}.msgpack.zst")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("ckpt_") and name.endswith(".msgpack.zst"):
+                out.append(int(name[5:15]))
+        return sorted(out)
+
+    def save(self, step: int, tree: Params, metadata: dict | None = None):
+        meta = dict(metadata or {}, step=step)
+        save(self._path(step), tree, meta)
+        self._gc()
+
+    def save_async(self, step: int, tree: Params, metadata: dict | None = None):
+        """Snapshot to host memory now, write in a background thread."""
+        host_tree = jax.tree.map(np.asarray, tree)
+        self.wait()
+        self._thread = threading.Thread(
+            target=self.save, args=(step, host_tree, metadata), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, template: Params):
+        """Restore the newest valid checkpoint; corrupt files are skipped
+        (node-failure tolerance).  Returns (tree, metadata) or None."""
+        for step in reversed(self.steps()):
+            try:
+                return load(self._path(step), template)
+            except (ValueError, KeyError, OSError):
+                continue
+        return None
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            try:
+                os.remove(self._path(s))
+            except OSError:
+                pass

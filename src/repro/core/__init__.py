@@ -1,0 +1,23 @@
+"""Multi-SPIN core: the paper's contribution as a composable library.
+
+Layers:
+  * analytic goodput model        (`goodput`)
+  * wireless channel model        (`channel`)
+  * bandwidth allocation          (`bandwidth`, Lemmas 1/3)
+  * draft-length control          (`draft_control`, Thm 1 / Prop 1 / Alg 1)
+  * speculative verification      (`verification`, eq. 4-5 exact sampling)
+  * draft generation              (`drafting`)
+  * round protocol + controller   (`protocol`, `controller`)
+"""
+
+from . import (  # noqa: F401
+    bandwidth,
+    channel,
+    controller,
+    draft_control,
+    drafting,
+    goodput,
+    lambertw,
+    protocol,
+    verification,
+)

@@ -1,0 +1,104 @@
+"""Server-side multi-access draft controller (paper protocol step 1).
+
+Each round the server receives device profiles (acceptance rate, compute
+speed), measures uplink channels, and solves the multi-access draft control
+problem for the configured scheme.  Also hosts the online acceptance-rate
+estimator (EWMA over realized accept fractions) used when task profiles are
+not declared a priori.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .draft_control import (
+    DraftControlSolution,
+    solve_fixed,
+    solve_heterogeneous,
+    solve_homogeneous_exhaustive,
+    solve_uniform_bandwidth,
+)
+
+SCHEMES = ("hete", "homo", "uni-bw", "fixed", "hete-packed")
+
+
+@dataclasses.dataclass
+class VerificationLatencyModel:
+    """T_ver(K) = T_fix + K T_lin (paper eq. 7), fitted per target model."""
+
+    t_fix: float
+    t_lin: float
+
+    def __call__(self, K: int) -> float:
+        return self.t_fix + K * self.t_lin
+
+
+@dataclasses.dataclass
+class MultiSpinController:
+    scheme: str
+    q_tok_bits: float
+    bandwidth_hz: float
+    t_ver_model: VerificationLatencyModel
+    L_max: int = 25
+    L_fixed: int = 8
+    n_phi: int = 40
+    n_lam: int = 40
+
+    def __post_init__(self):
+        assert self.scheme in SCHEMES, self.scheme
+
+    def plan(self, alphas: np.ndarray, T_S: np.ndarray,
+             rates: np.ndarray) -> DraftControlSolution:
+        K = len(alphas)
+        T_ver = self.t_ver_model(K)
+        kw = dict(T_S=T_S, r=rates, Q_tok=self.q_tok_bits,
+                  B=self.bandwidth_hz, T_ver=T_ver)
+        if self.scheme == "hete":
+            return solve_heterogeneous(alphas, L_max=self.L_max,
+                                       n_phi=self.n_phi, n_lam=self.n_lam, **kw)
+        if self.scheme == "hete-packed":
+            from .beyond import TokenBudgetVerifier, solve_heterogeneous_packed
+            verifier = TokenBudgetVerifier.from_affine(
+                self.t_ver_model.t_fix, self.t_ver_model.t_lin)
+            kw.pop("T_ver")
+            return solve_heterogeneous_packed(
+                alphas, verifier=verifier, L_max=self.L_max,
+                n_phi=self.n_phi, n_lam=self.n_lam, **kw)
+        if self.scheme == "homo":
+            return solve_homogeneous_exhaustive(alphas, L_max=self.L_max, **kw)
+        if self.scheme == "uni-bw":
+            return solve_uniform_bandwidth(alphas, L_max=self.L_max, **kw)
+        return solve_fixed(alphas, L_fixed=self.L_fixed, **kw)
+
+
+class AcceptanceEstimator:
+    """Online EWMA estimate of per-device acceptance rates from realized
+    verification outcomes (used when devices do not report task profiles)."""
+
+    def __init__(self, K: int, prior: float = 0.8, decay: float = 0.9):
+        self.succ = np.full(K, prior)       # EWMA accepted Bernoulli trials
+        self.trials = np.ones(K)            # EWMA total Bernoulli trials
+        self.decay = decay
+
+    @property
+    def alpha_hat(self) -> np.ndarray:
+        return np.clip(self.succ / np.maximum(self.trials, 1e-9), 0.01, 0.995)
+
+    @alpha_hat.setter
+    def alpha_hat(self, value):
+        self.succ = np.asarray(value, dtype=np.float64).copy()
+        self.trials = np.ones_like(self.succ)
+
+    def update(self, accept_counts: np.ndarray, lengths: np.ndarray):
+        """Each accepted draft token is a Bernoulli success; the (at most one)
+        rejection is a failure.  EWMA of successes and trials separately —
+        the ratio-of-sums estimator is consistent for the truncated
+        geometric, unlike the per-round mean of ratios."""
+        counts = np.asarray(accept_counts, dtype=np.float64)
+        lengths = np.maximum(np.asarray(lengths, dtype=np.float64), 1.0)
+        rejected = (counts < lengths).astype(np.float64)
+        self.succ = self.decay * self.succ + (1 - self.decay) * counts
+        self.trials = self.decay * self.trials + (1 - self.decay) * (counts + rejected)
+        return self.alpha_hat

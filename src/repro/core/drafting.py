@@ -1,0 +1,73 @@
+"""Device-side draft generation (paper Sec. II-A1, protocol step 2).
+
+The SLM drafts autoregressively; each step's distribution is truncated to the
+top-|V^hat| tokens and renormalized — the device samples from exactly the
+distribution it uploads (eq. 9 payload), which keeps server-side verification
+exact under uplink compression.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .verification import truncate_renormalize
+
+
+@dataclasses.dataclass
+class DraftResult:
+    """One round of drafting for a batch of B device streams.
+
+    tokens: (B, L) sampled draft tokens.
+    probs:  (B, L) probability of each sampled token under the (truncated)
+            SLM distribution — the p_S of eq. 4.
+    q_idx / q_val: (B, L, Vhat) the uploaded sparse SLM distributions.
+    cache:  SLM cache after processing [pending, d_1 .. d_{L-1}].
+    """
+
+    tokens: jax.Array
+    probs: jax.Array
+    q_idx: jax.Array
+    q_val: jax.Array
+    cache: object
+
+
+def generate_drafts(model, params, cache, pending: jax.Array, pos: jax.Array,
+                    L: int, key: jax.Array, vhat: int,
+                    temperature: float = 1.0) -> DraftResult:
+    """Draft L tokens per stream.
+
+    pending: (B,) the last committed token not yet in the SLM cache.
+    pos:     (B,) SLM cache fill levels (tokens already processed).
+    """
+    B = pending.shape[0]
+    toks = pending
+    keys = jax.random.split(key, L)
+    out_tokens, out_probs, out_idx, out_val = [], [], [], []
+    for t in range(L):
+        logits, cache = model.forward_window(params, toks[:, None], cache, pos + t)
+        probs = jax.nn.softmax(logits[:, 0].astype(jnp.float32) / temperature,
+                               axis=-1)
+        idx, val = truncate_renormalize(probs, vhat)
+        j = jax.random.categorical(keys[t], jnp.log(jnp.maximum(val, 1e-30)),
+                                   axis=-1)                       # (B,)
+        toks = jnp.take_along_axis(idx, j[:, None], axis=-1)[:, 0]
+        p_tok = jnp.take_along_axis(val, j[:, None], axis=-1)[:, 0]
+        out_tokens.append(toks)
+        out_probs.append(p_tok)
+        out_idx.append(idx)
+        out_val.append(val)
+    # Write d_L into the cache (logits discarded): on full acceptance the
+    # committed prefix includes d_L, and without this step the SLM cache
+    # would have a hole at its position.  This (L+1)-th SLM pass overlaps the
+    # upload in the latency model (DESIGN.md §7).
+    _, cache = model.forward_window(params, toks[:, None], cache, pos + L)
+    return DraftResult(
+        tokens=jnp.stack(out_tokens, axis=1),
+        probs=jnp.stack(out_probs, axis=1),
+        q_idx=jnp.stack(out_idx, axis=1),
+        q_val=jnp.stack(out_val, axis=1),
+        cache=cache,
+    )

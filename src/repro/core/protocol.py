@@ -1,0 +1,225 @@
+"""The Multi-SPIN round protocol (paper Sec. III-A, Fig. 2).
+
+``MultiSpinProtocol.run_round`` executes steps 1-5 with full latency
+bookkeeping.  Two compute backends:
+
+  * synthetic — acceptance outcomes drawn Bernoulli(alpha_k) (paper's
+    analytic regime; used for the large-scale sweeps of Figs. 6-8);
+  * engine    — a ``repro.serving.spec_engine.SpecEngine`` running real JAX
+    models (used for Fig. 3 empirical curves and integration tests).
+
+Fault-tolerance hooks: device dropout (a device missing its deadline is
+skipped this round and its tokens carried over), controller re-planning on
+churn, and round-state checkpointing live here as first-class features.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .channel import ChannelConfig, ChannelState
+from .controller import AcceptanceEstimator, MultiSpinController
+from .goodput import expected_accepted_tokens
+
+
+@dataclasses.dataclass
+class DeviceProfile:
+    """Static per-device characteristics (paper Sec. VI-A)."""
+
+    T_S: float            # per-token SLM latency [s]
+    alpha: float          # task-level acceptance rate (Table I)
+    task: str = ""
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    lengths: np.ndarray
+    bandwidth: np.ndarray
+    accepted: np.ndarray          # realized accepted tokens (incl. bonus)
+    t_ma: float
+    t_ver: float
+    t_round: float
+    predicted_goodput: float
+    realized_goodput: float
+    active: np.ndarray            # device participation mask
+
+
+class MultiSpinProtocol:
+    def __init__(self, controller: MultiSpinController,
+                 channel_cfg: ChannelConfig,
+                 devices: list[DeviceProfile],
+                 rng: np.random.Generator,
+                 engine=None,
+                 engine_state=None,
+                 use_estimator: bool = False,
+                 deadline_factor: float | None = None):
+        self.controller = controller
+        self.channel_cfg = channel_cfg
+        self.devices = devices
+        self.rng = rng
+        self.engine = engine
+        self.engine_state = engine_state
+        self.estimator = AcceptanceEstimator(len(devices)) if use_estimator else None
+        self.deadline_factor = deadline_factor
+        self.channel = ChannelState.sample(channel_cfg, len(devices), rng)
+        self.history: list[RoundRecord] = []
+        self._round_idx = 0
+
+    # ------------------------------------------------------------------
+
+    @property
+    def alphas(self) -> np.ndarray:
+        if self.estimator is not None:
+            return self.estimator.alpha_hat
+        return np.array([d.alpha for d in self.devices])
+
+    @property
+    def t_slm(self) -> np.ndarray:
+        return np.array([d.T_S for d in self.devices])
+
+    def run_round(self, key=None) -> RoundRecord:
+        K = len(self.devices)
+        # --- step 1: system configuration ---
+        self.channel = self.channel.refade(self.rng)       # block fading
+        plan = self.controller.plan(self.alphas, self.t_slm, self.channel.rates)
+        lengths = np.asarray(plan.lengths, dtype=np.int64)
+        bandwidth = np.asarray(plan.bandwidth, dtype=np.float64)
+
+        # --- steps 2-3: drafting + upload latency (straggler-limited) ---
+        per_dev_lat = lengths * (self.t_slm + self.controller.q_tok_bits
+                                 / np.maximum(bandwidth * self.channel.rates, 1e-9))
+        active = np.ones(K, dtype=bool)
+        if self.deadline_factor is not None:
+            # straggler mitigation: devices missing deadline_factor x median
+            # latency are dropped from this round's batch
+            deadline = self.deadline_factor * np.median(per_dev_lat)
+            active = per_dev_lat <= deadline
+            if not active.any():
+                active[:] = True
+        t_ma = float(np.max(per_dev_lat[active]))
+
+        # --- step 4: batched verification ---
+        K_active = int(active.sum())
+        t_ver = float(plan.meta.get("t_ver",
+                                    self.controller.t_ver_model(K_active)))
+        if self.engine is not None:
+            import jax
+            key = jax.random.PRNGKey(self.rng.integers(2 ** 31)) if key is None else key
+            self.engine_state, res, _ = self.engine.spin_round(
+                self.engine_state, lengths, key)
+            accepted = np.asarray(res.output_len, dtype=np.int64)
+            accepted = np.where(active, accepted, 0)
+        else:
+            # synthetic verification: Bernoulli draws from the TRUE device
+            # alphas (the estimator, when enabled, only informs planning)
+            true_alpha = np.array([d.alpha for d in self.devices])
+            u = self.rng.random((K, int(lengths.max())))
+            pos_ok = np.arange(int(lengths.max()))[None, :] < lengths[:, None]
+            acc = (u < true_alpha[:, None]) & pos_ok
+            n = np.sum(np.cumprod(acc, axis=1), axis=1)
+            accepted = np.where(active, n + 1, 0)
+
+        # --- step 5: feedback / estimator update ---
+        if self.estimator is not None:
+            self.estimator.update(np.maximum(accepted - 1, 0), lengths)
+
+        t_round = t_ma + t_ver
+        rec = RoundRecord(
+            lengths=lengths, bandwidth=bandwidth, accepted=accepted,
+            t_ma=t_ma, t_ver=t_ver, t_round=t_round,
+            predicted_goodput=plan.goodput,
+            realized_goodput=float(np.sum(accepted) / t_round),
+            active=active,
+        )
+        self.history.append(rec)
+        self._round_idx += 1
+        return rec
+
+    def run(self, n_rounds: int) -> dict:
+        for _ in range(n_rounds):
+            self.run_round()
+        return self.summary()
+
+    # ------------------------------------------------------------------
+    # Beyond-paper: pipelined half-batch schedule (core.beyond). While half
+    # A drafts+uploads, the server verifies half B; wall-clock per half-round
+    # is max(T_ma(current half), T_ver(other half)).
+    # ------------------------------------------------------------------
+
+    def run_pipelined(self, n_rounds: int) -> dict:
+        K = len(self.devices)
+        idx = np.argsort([d.alpha for d in self.devices])
+        halves = [list(idx[0::2]), list(idx[1::2])]
+        total_tokens, total_time = 0.0, 0.0
+        pending_ver: float | None = None   # T_ver of the half now verifying
+        for i in range(n_rounds):
+            h = halves[i % 2]
+            self.channel = self.channel.refade(self.rng)
+            alphas = self.alphas[h]
+            t_slm = self.t_slm[h]
+            rates = self.channel.rates[h]
+            plan = self.controller.plan(alphas, t_slm, rates)
+            lengths = np.asarray(plan.lengths, dtype=np.int64)
+            per_dev = lengths * (t_slm + self.controller.q_tok_bits
+                                 / np.maximum(np.asarray(plan.bandwidth)
+                                              * rates, 1e-9))
+            t_ma = float(np.max(per_dev))
+            # overlap with the other half's verification
+            step_time = max(t_ma, pending_ver or 0.0)
+            t_ver = float(plan.meta.get(
+                "t_ver", self.controller.t_ver_model(len(h))))
+            pending_ver = t_ver
+            true_alpha = np.array([self.devices[j].alpha for j in h])
+            u = self.rng.random((len(h), int(lengths.max())))
+            ok = np.arange(int(lengths.max()))[None, :] < lengths[:, None]
+            acc = (u < true_alpha[:, None]) & ok
+            n = np.sum(np.cumprod(acc, axis=1), axis=1) + 1
+            total_tokens += float(np.sum(n))
+            total_time += step_time
+        total_time += pending_ver or 0.0   # drain the pipe
+        return {"rounds": n_rounds, "tokens": total_tokens,
+                "seconds": total_time,
+                "goodput": total_tokens / total_time if total_time else 0.0}
+
+    def summary(self) -> dict:
+        total_tokens = float(sum(np.sum(r.accepted) for r in self.history))
+        total_time = float(sum(r.t_round for r in self.history))
+        return {
+            "rounds": len(self.history),
+            "tokens": total_tokens,
+            "seconds": total_time,
+            "goodput": total_tokens / total_time if total_time else 0.0,
+            "mean_predicted_goodput": float(np.mean(
+                [r.predicted_goodput for r in self.history])),
+        }
+
+    # ------------------------------------------------------------------
+    # Fault tolerance: round-state checkpoint/restore (serving pods restart
+    # mid-conversation without losing protocol state).
+    # ------------------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {
+            "round_idx": self._round_idx,
+            "avg_gains": self.channel.avg_gains,
+            "alpha_hat": (self.estimator.alpha_hat
+                          if self.estimator is not None else None),
+        }
+
+    def load_state_dict(self, state: dict):
+        self._round_idx = state["round_idx"]
+        self.channel = ChannelState.sample(self.channel_cfg, len(self.devices),
+                                           self.rng, avg_gains=state["avg_gains"])
+        if state.get("alpha_hat") is not None and self.estimator is not None:
+            self.estimator.alpha_hat = state["alpha_hat"]
+
+    def drop_device(self, k: int):
+        """Permanent device failure: re-plan for the survivors (elastic)."""
+        del self.devices[k]
+        self.channel = ChannelState.sample(
+            self.channel_cfg, len(self.devices), self.rng,
+            avg_gains=np.delete(self.channel.avg_gains, k))
+        if self.estimator is not None:
+            self.estimator.alpha_hat = np.delete(self.estimator.alpha_hat, k)

@@ -1,0 +1,132 @@
+"""Server-side speculative verification (paper Sec. II-A2, eq. 4-5).
+
+Implements exact speculative sampling [Leviathan et al. 2023]: each drafted
+token is accepted with probability min(1, p_L/p_S); the first rejected
+position is replaced by a sample from the calibrated residual distribution
+normalize(max(p_L - p_S, 0)); full acceptance earns one bonus token from the
+LLM distribution.  The composition is distributed exactly as LLM sampling —
+property-tested in tests/test_verification.py.
+
+Supports both dense SLM distributions (co-located engine path) and the
+paper's uplink-compressed sparse form (top-|V^hat| values + indices, Sec.
+II-B): the device samples from the truncated+renormalized SLM distribution
+and uploads exactly that distribution, so verification remains exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class VerifyResult:
+    """Outcome of one batched verification round.
+
+    accept_counts: (B,) int32 — n_k in [0, L_k]: accepted draft tokens.
+    output_tokens: (B, L+1) int32 — accepted tokens + calibrated/bonus token
+        at position n_k; positions > n_k are padding (0).
+    output_len:    (B,) int32 — n_k + 1 (paper: N_k, includes the extra token).
+    accept_mask:   (B, L) bool — per-position Bernoulli outcomes A_{k,l}.
+    """
+
+    accept_counts: jax.Array
+    output_tokens: jax.Array
+    output_len: jax.Array
+    accept_mask: jax.Array
+
+
+def sparse_to_dense(idx: jax.Array, val: jax.Array, vocab: int) -> jax.Array:
+    """Scatter top-|V^hat| (idx, val) rows into dense (.., V) distributions."""
+    out = jnp.zeros(idx.shape[:-1] + (vocab,), val.dtype)
+    return _scatter_last(out, idx, val)
+
+
+def _scatter_last(out, idx, val):
+    grids = jnp.meshgrid(*[jnp.arange(s) for s in idx.shape[:-1]], indexing="ij")
+    grids = tuple(g[..., None] for g in grids)
+    return out.at[grids + (idx,)].add(val)
+
+
+def truncate_renormalize(probs: jax.Array, k: int):
+    """Top-k truncation + renormalization of draft distributions (paper Sec.
+    II-B uplink compression).  Returns (idx (.., k), val (.., k))."""
+    val, idx = jax.lax.top_k(probs, k)
+    val = val / jnp.sum(val, axis=-1, keepdims=True)
+    return idx, val
+
+
+def verify_drafts(key: jax.Array,
+                  draft_tokens: jax.Array,     # (B, L) int32
+                  draft_probs: jax.Array,      # (B, L) p_S of each drafted token
+                  target_logits: jax.Array,    # (B, L+1, V) LLM logits
+                  q_dense: jax.Array | None = None,    # (B, L, V) SLM dists
+                  q_idx: jax.Array | None = None,      # (B, L, Vhat) sparse form
+                  q_val: jax.Array | None = None,
+                  draft_len: jax.Array | None = None,  # (B,) true L_k <= L (zero-pad)
+                  ) -> VerifyResult:
+    """Batched verification of K drafts in one pass (paper protocol step 4).
+
+    ``target_logits[:, l]`` must condition on the prefix + draft tokens < l
+    (the engine produces this with one forward_window call).  With
+    heterogeneous draft lengths, rows are zero-padded to L = max L_k and
+    ``draft_len`` marks each row's true length; padded positions are forced
+    to rejection-impossible (they are simply never accepted).
+    """
+    B, L = draft_tokens.shape
+    V = target_logits.shape[-1]
+    k_accept, k_resid, k_bonus = jax.random.split(key, 3)
+
+    # p_L(x_l) for every drafted position — fused softmax+gather kernel.
+    flat_logits = target_logits[:, :L].reshape(B * L, V)
+    p_target = kops.gather_softmax_prob(
+        flat_logits, draft_tokens.reshape(B * L)).reshape(B, L)
+
+    ratio = p_target / jnp.maximum(draft_probs, 1e-30)
+    u = jax.random.uniform(k_accept, (B, L))
+    accept = u < jnp.minimum(ratio, 1.0)                      # eq. 4
+    if draft_len is not None:
+        accept = accept & (jnp.arange(L)[None, :] < draft_len[:, None])
+    prefix_ok = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
+    n_acc = jnp.sum(prefix_ok, axis=-1)                       # (B,) first-rej index
+
+    # --- calibrated residual sample at the first rejected position (eq. 5) ---
+    sel = jnp.minimum(n_acc, L - 1)
+    logits_rej = jnp.take_along_axis(
+        target_logits, sel[:, None, None], axis=1)[:, 0]      # (B, V)
+    p_rej = jax.nn.softmax(logits_rej.astype(jnp.float32), axis=-1)
+    if q_dense is not None:
+        q_rej = jnp.take_along_axis(q_dense, sel[:, None, None], axis=1)[:, 0]
+    else:
+        idx_rej = jnp.take_along_axis(q_idx, sel[:, None, None], axis=1)[:, 0]
+        val_rej = jnp.take_along_axis(q_val, sel[:, None, None], axis=1)[:, 0]
+        q_rej = _scatter_last(jnp.zeros((B, V), jnp.float32), idx_rej,
+                              val_rej.astype(jnp.float32))
+    u_resid = jax.random.uniform(k_resid, (B,))
+    calibrated = kops.residual_sample(p_rej, q_rej, u_resid)  # (B,)
+
+    # --- bonus token when the whole draft is accepted ---
+    true_len = draft_len if draft_len is not None else jnp.full((B,), L)
+    logits_bonus = jnp.take_along_axis(
+        target_logits, true_len[:, None, None], axis=1)[:, 0]
+    bonus = jax.random.categorical(k_bonus, logits_bonus.astype(jnp.float32),
+                                   axis=-1).astype(jnp.int32)
+
+    full_accept = n_acc >= true_len
+    extra = jnp.where(full_accept, bonus, calibrated)
+
+    # --- assemble outputs: draft[:n] + extra at position n ---
+    pos = jnp.arange(L + 1)[None, :]
+    n_col = n_acc[:, None]
+    padded_draft = jnp.pad(draft_tokens, ((0, 0), (0, 1)))
+    out = jnp.where(pos < n_col, padded_draft,
+                    jnp.where(pos == n_col, extra[:, None], 0)).astype(jnp.int32)
+
+    return VerifyResult(accept_counts=n_acc.astype(jnp.int32),
+                        output_tokens=out,
+                        output_len=(n_acc + 1).astype(jnp.int32),
+                        accept_mask=accept)

@@ -1,0 +1,130 @@
+"""Distributed-optimization collectives: gradient compression primitives.
+
+Cross-pod data-parallel gradient traffic is the dominant inter-pod collective
+during training (DESIGN.md §8).  Two standard compressors are provided, both
+with error feedback so compression error accumulates into the next step
+instead of biasing the gradient:
+
+  * top-k sparsification (magnitude) — upload k fraction of entries
+  * int8 quantization with per-leaf scale — 4x over fp32 / 2x over bf16
+
+``compressed_psum_int8`` is the shard_map building block that performs the
+quantized all-reduce on a named axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Error feedback
+# ---------------------------------------------------------------------------
+
+def init_error_feedback(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+# Top-k sparsification
+# ---------------------------------------------------------------------------
+
+def topk_compress(x: jax.Array, frac: float):
+    """Keep the top ``frac`` fraction of entries by magnitude.
+
+    Returns (idx, val, residual): residual = x - decompress(idx, val) feeds
+    the error-feedback accumulator.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.shape[0] * frac))
+    mag = jnp.abs(flat)
+    val_k, idx_k = jax.lax.top_k(mag, k)
+    vals = flat[idx_k]
+    residual = flat.at[idx_k].set(0.0).reshape(x.shape)
+    return idx_k, vals, residual
+
+
+def topk_decompress(idx: jax.Array, vals: jax.Array, shape) -> jax.Array:
+    import numpy as np
+    size = int(np.prod(shape))
+    return jnp.zeros((size,), jnp.float32).at[idx].set(vals).reshape(shape)
+
+
+def compress_gradients_topk(grads: Params, ef: Params, frac: float):
+    """Apply error feedback + top-k to every leaf.
+
+    Returns (compressed {path: (idx, val, shape)}, new_ef, effective_grads)
+    where effective_grads is what the optimizer would see after an exact
+    all-reduce of the compressed payloads (single-host semantics — the
+    multi-host path wires the payloads through psum instead).
+    """
+    corrected = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, ef)
+    flat, treedef = jax.tree.flatten(corrected)
+    comp, new_ef, effective = [], [], []
+    for leaf in flat:
+        idx, vals, residual = topk_compress(leaf, frac)
+        comp.append((idx, vals, leaf.shape))
+        new_ef.append(residual)
+        effective.append(topk_decompress(idx, vals, leaf.shape))
+    return (comp,
+            jax.tree.unflatten(treedef, new_ef),
+            jax.tree.unflatten(treedef, effective))
+
+
+def compression_ratio(comp) -> float:
+    import numpy as np
+    dense = sum(np.prod(shape) * 4 for _, _, shape in comp)
+    sparse = sum(idx.size * 4 + vals.size * 4 for idx, vals, _ in comp)
+    return float(sparse / dense)
+
+
+# ---------------------------------------------------------------------------
+# Int8 quantized all-reduce
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x: jax.Array):
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_int8(x: jax.Array, axis_name: str) -> jax.Array:
+    """shard_map building block: int8-quantize locally, all-reduce the int32
+    accumulations and the scales, dequantize.  Wire format is 1 byte/elem
+    vs 4 (fp32) on the reduced axis."""
+    q, scale = quantize_int8(x)
+    # each participant quantized with its own scale; the reduction needs a
+    # common one: re-quantize against the max scale (conservative)
+    smax = jax.lax.pmax(scale, axis_name)
+    requant = jnp.clip(jnp.round(dequantize_int8(q, scale) / smax), -127, 127)
+    acc = jax.lax.psum(requant.astype(jnp.int32), axis_name)
+    return acc.astype(jnp.float32) * smax
+
+
+def make_compressed_allreduce(mesh, axis_name: str = "data"):
+    """jit-able f(x) -> mean over ``axis_name`` with int8 wire format."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n = mesh.shape[axis_name]
+
+    @jax.jit
+    def allreduce_mean(x):
+        """x: (n_workers, ...) per-worker gradients -> replicated mean."""
+        fn = shard_map(
+            lambda v: compressed_psum_int8(v[0], axis_name) / n,
+            mesh=mesh, in_specs=P(axis_name), out_specs=P(),
+        )
+        return fn(x)
+
+    return allreduce_mean

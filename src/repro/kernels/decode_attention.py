@@ -1,0 +1,189 @@
+"""Flash-decode attention: one query step against a long KV cache, Pallas TPU.
+
+The decode_32k / long_500k serving shapes are dominated by streaming the KV
+cache HBM->VMEM.  The kernel walks the sequence tiles of the cache in grid
+order, carrying the online-softmax state in VMEM scratch, and masks tiles
+beyond each row's valid length (per-row lengths live in SMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bs: int, n_s: int, scale: float, gsize: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid_len = len_ref[pl.program_id(0)]
+
+    @pl.when(si * bs < valid_len)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bs, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (gsize, bs), 1) + si * bs
+        s = jnp.where(kpos < valid_len, s, _NEG)             # (G, bs)
+        m_prev = m_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[:, :1] = l_scr[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[:, :1] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(si == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[:, :1], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, lengths: jax.Array,
+                            bs: int = 512, interpret: bool = False) -> jax.Array:
+    """q: (B, H, D); caches: (B, S, KV, D); lengths: (B,) -> (B, H, D).
+
+    Grid: (B, KV, S-tiles); all G = H/KV query heads of one kv head are
+    processed together in the (G, D) q tile, so the kv tile is read once for
+    the whole group (the GQA bandwidth win).
+    """
+    B, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(D)
+    bs = min(bs, S)
+    s_pad = (-S) % bs
+    if s_pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    Sp = k_cache.shape[1]
+    n_s = Sp // bs
+    qg = q.reshape(B, KV, G, D)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs, n_s=n_s, scale=scale, gsize=G),
+        grid=(B, KV, n_s),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # lengths prefetch-like
+            pl.BlockSpec((1, 1, G, D), lambda b, h, si: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, si: (b, si, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, si: (b, si, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, si: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(B, H, D)
+
+
+# ---------------------------------------------------------------------------
+# int8-quantized KV variant (KIVI-style per-head scales, fused dequant)
+# ---------------------------------------------------------------------------
+
+def _kernel_q8(len_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref, o_ref,
+               m_scr, l_scr, acc_scr, *, bs: int, n_s: int, scale: float,
+               gsize: int):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid_len = len_ref[b]
+    k_scale = ks_ref[b, h]
+    v_scale = vs_ref[b, h]
+
+    @pl.when(si * bs < valid_len)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
+        # fused dequantization on the VMEM tiles
+        k = k_ref[0, :, 0, :].astype(jnp.float32) * k_scale  # (bs, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32) * v_scale
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (gsize, bs), 1) + si * bs
+        s = jnp.where(kpos < valid_len, s, _NEG)
+        m_prev = m_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[:, :1] = l_scr[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[:, :1] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(si == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[:, :1], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention_q8_pallas(q: jax.Array, k_cache: jax.Array,
+                               v_cache: jax.Array, k_scale: jax.Array,
+                               v_scale: jax.Array, lengths: jax.Array,
+                               bs: int = 512, interpret: bool = False
+                               ) -> jax.Array:
+    """q: (B, H, D); caches: (B, S, KV, D) int8; scales: (B, KV)."""
+    B, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(D)
+    bs = min(bs, S)
+    s_pad = (-S) % bs
+    if s_pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    Sp = k_cache.shape[1]
+    n_s = Sp // bs
+    qg = q.reshape(B, KV, G, D)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_q8, bs=bs, n_s=n_s, scale=scale, gsize=G),
+        grid=(B, KV, n_s),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # lengths
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # k scales (B, KV)
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # v scales
+            pl.BlockSpec((1, 1, G, D), lambda b, h, si: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, si: (b, si, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, si: (b, si, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, si: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), k_scale.astype(jnp.float32),
+      v_scale.astype(jnp.float32), qg, k_cache, v_cache)
+    return out.reshape(B, H, D)

@@ -1,0 +1,119 @@
+"""Causal GQA flash attention (prefill path), Pallas TPU.
+
+Online-softmax tiling (FlashAttention adapted to the TPU memory hierarchy):
+the (bq x bk) score tile lives in VMEM/VREGs, the running max / denominator /
+accumulator persist in VMEM scratch across the sequential kv-grid steps, and
+q/k/v tiles stream HBM->VMEM once each.  Block shapes default to 128 (MXU
+lane-aligned); causal skipping is done with pl.when on whole tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, bq: int, bk: int, n_k: int, causal: bool,
+            kv_off: int, skv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # whole tile below the causal diagonal? (first kv position of tile vs
+    # last query position of tile)
+    run = True
+    if causal:
+        run = (ki * bk) <= (qi * bq + bq - 1 + kv_off)
+
+    @pl.when(run)
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1) + ki * bk
+        if causal:
+            qpos = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + qi * bq + kv_off
+            s = jnp.where(kpos <= qpos, s, _NEG)
+        s = jnp.where(kpos < skv, s, _NEG)  # kv padding
+        m_prev = m_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[:, :1] = l_scr[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[:, :1] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[:, :1], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, bq: int = 128, bk: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D) -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(D)
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    q_pad, k_pad = (-Sq) % bq, (-Skv) % bk
+    # layout: (B, H, S, D) so the head axis is a clean grid dimension
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if q_pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, q_pad), (0, 0)))
+    if k_pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+    Sqp, Skvp = qt.shape[2], kt.shape[2]
+    n_q, n_k = Sqp // bq, Skvp // bk
+    # causal offset: query i attends kv j <= i + (Skv - Sq)
+    kv_off = Skv - Sq
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, bq=bq, bk=bk, n_k=n_k,
+                          causal=causal, kv_off=kv_off, skv=Skv),
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :, :Sq]
+    return jnp.moveaxis(out, 1, 2)
+
+
+def mha_reference(q, k, v, causal=True):
+    from . import ref
+    return ref.flash_attention_ref(q, k, v, causal=causal)

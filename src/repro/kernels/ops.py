@@ -1,0 +1,127 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op dispatches between the Pallas TPU kernel and the pure-jnp oracle in
+``ref.py``:  on CPU (this container) the oracle executes; on TPU the Pallas
+path is used; ``interpret=True`` Pallas execution is exercised by the kernel
+tests.  The environment variable / flag ``REPRO_KERNELS`` ∈
+{auto, pallas, ref, interpret} forces a path.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+_MODE_ENV = "REPRO_KERNELS"
+
+
+def kernel_mode() -> str:
+    mode = os.environ.get(_MODE_ENV, "auto")
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return mode
+
+
+def _use_pallas() -> bool:
+    return kernel_mode() in ("pallas", "interpret")
+
+
+def _interpret() -> bool:
+    return kernel_mode() == "interpret"
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba-2)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _ssd_scan_ref_jit(x, dt, A, B, C, chunk, initial_state):
+    return ref.ssd_scan_ref(x, dt, A, B, C, chunk=chunk, initial_state=initial_state)
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int = 64, initial_state=None):
+    """Chunked SSD forward. See ref.ssd_scan_ref for shapes.
+
+    Sequences are zero-padded to a chunk multiple; dt=0 padding is exact
+    (decay e^0 = 1, update 0), so the final state is untouched.
+    """
+    s = x.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if _use_pallas():
+        from .ssd_scan import ssd_scan_pallas
+        y, fs = ssd_scan_pallas(x, dt, A, B, C, chunk=chunk,
+                                initial_state=initial_state,
+                                interpret=_interpret())
+    else:
+        y, fs = ref.ssd_scan_ref(x, dt, A, B, C, chunk=chunk,
+                                 initial_state=initial_state)
+    return (y[:, :s] if pad else y), fs
+
+
+def ssd_decode(x, dt, A, B, C, state):
+    """One-token SSD recurrence (cheap; always the jnp formulation)."""
+    return ref.ssd_decode_ref(x, dt, A, B, C, state)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, causal: bool = True):
+    """Causal GQA attention. q: (B,Sq,H,D), k/v: (B,Skv,KV,D)."""
+    if _use_pallas():
+        from .flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      interpret=_interpret())
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def decode_attention(q, k_cache, v_cache, lengths):
+    """Single-step decode attention against a KV cache."""
+    if _use_pallas():
+        from .decode_attention import decode_attention_pallas
+        return decode_attention_pallas(q, k_cache, v_cache, lengths,
+                                       interpret=_interpret())
+    return ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+
+
+def decode_attention_q8(q, k_cache, v_cache, k_scale, v_scale, lengths):
+    """Decode attention over an int8 KV cache (per-head scales)."""
+    if _use_pallas():
+        from .decode_attention import decode_attention_q8_pallas
+        return decode_attention_q8_pallas(q, k_cache, v_cache, k_scale,
+                                          v_scale, lengths,
+                                          interpret=_interpret())
+    return ref.decode_attention_quantized_ref(q, k_cache, v_cache, k_scale,
+                                              v_scale, lengths)
+
+
+# ---------------------------------------------------------------------------
+# Speculative-verification ops (the paper's server-side hot path)
+# ---------------------------------------------------------------------------
+
+def gather_softmax_prob(logits, token_ids):
+    """p_target(token) for each row without materializing softmax(V)."""
+    if _use_pallas():
+        from .gather_softmax_prob import gather_softmax_prob_pallas
+        return gather_softmax_prob_pallas(logits, token_ids,
+                                          interpret=_interpret())
+    return ref.gather_softmax_prob_ref(logits, token_ids)
+
+
+def residual_sample(p, q, u):
+    """Sample from normalize(max(p-q, 0)) via inverse CDF (paper eq. 5)."""
+    if _use_pallas():
+        from .residual_sample import residual_sample_pallas
+        return residual_sample_pallas(p, q, u, interpret=_interpret())
+    return ref.residual_sample_ref(p, q, u)

@@ -1,0 +1,215 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth used by (a) the kernel allclose
+tests and (b) the CPU execution path of ``ops.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (prefill, causal, GQA)
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, scale: float | None = None) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D) -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Sq, KV, G, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    if causal:
+        Skv = k.shape[1]
+        mask = jnp.arange(Skv)[None, :] <= (jnp.arange(Sq)[:, None] + (Skv - Sq))
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, Sq, H, D)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one query step against a KV cache with valid lengths)
+# ---------------------------------------------------------------------------
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         lengths: jax.Array, scale: float | None = None) -> jax.Array:
+    """q: (B, H, D); caches: (B, S, KV, D); lengths: (B,) -> (B, H, D).
+
+    Attends to cache positions [0, lengths_b).
+    """
+    B, H, D = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    S = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, KV, G, D)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache).astype(jnp.float32) * scale
+    valid = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None, :]
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v_cache)
+    return out.reshape(B, H, D)
+
+
+def decode_attention_quantized_ref(q: jax.Array, k_cache: jax.Array,
+                                   v_cache: jax.Array, k_scale: jax.Array,
+                                   v_scale: jax.Array, lengths: jax.Array
+                                   ) -> jax.Array:
+    """Decode attention over an int8-quantized KV cache.
+
+    k_cache/v_cache: (B, S, KV, D) int8; scales: (B, KV) per-head dequant
+    factors.  Dequantize then run the exact fp path (the kernel fuses the
+    dequant into the tile loads instead).
+    """
+    k = k_cache.astype(jnp.float32) * k_scale[:, None, :, None]
+    v = v_cache.astype(jnp.float32) * v_scale[:, None, :, None]
+    return decode_attention_ref(q, k, v, lengths)
+
+
+def quantize_kv(k: jax.Array, v: jax.Array):
+    """Per (batch, kv-head) symmetric int8 quantization of a KV cache."""
+    def q_one(x):
+        scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(1, 3)) / 127.0
+        scale = jnp.maximum(scale, 1e-8)
+        q = jnp.clip(jnp.round(x.astype(jnp.float32)
+                               / scale[:, None, :, None]), -127, 127)
+        return q.astype(jnp.int8), scale
+    kq, ks = q_one(k)
+    vq, vs = q_one(v)
+    return kq, ks, vq, vs
+
+
+# ---------------------------------------------------------------------------
+# Fused softmax + gather (verification probabilities, paper eq. 3-4)
+# ---------------------------------------------------------------------------
+
+def gather_softmax_prob_ref(logits: jax.Array, token_ids: jax.Array) -> jax.Array:
+    """logits: (N, V); token_ids: (N,) -> probability of each token (N,).
+
+    p = softmax(logits)[token] computed without materializing softmax over V
+    (reference does materialize; the kernel streams V tiles).
+    """
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    z = jnp.sum(jnp.exp(logits - m), axis=-1)
+    picked = jnp.take_along_axis(logits, token_ids[:, None], axis=-1)[:, 0]
+    return jnp.exp(picked - m[:, 0]) / z
+
+
+# ---------------------------------------------------------------------------
+# Residual-distribution sampling (paper eq. 5 calibrated token)
+# ---------------------------------------------------------------------------
+
+def residual_sample_ref(p: jax.Array, q: jax.Array, u: jax.Array) -> jax.Array:
+    """Sample from normalize(max(p - q, 0)) by inverse CDF.
+
+    p, q: (N, V) probability rows; u: (N,) uniforms in [0,1) -> tokens (N,).
+    Falls back to argmax(p) when the residual is numerically all-zero
+    (p == q), which matches rejection being impossible in exact arithmetic.
+    """
+    r = jnp.maximum(p.astype(jnp.float32) - q.astype(jnp.float32), 0.0)
+    z = jnp.sum(r, axis=-1, keepdims=True)
+    degenerate = z[:, 0] <= 0.0
+    cdf = jnp.cumsum(r, axis=-1)
+    target = u[:, None] * z
+    token = jnp.sum((cdf <= target).astype(jnp.int32), axis=-1)
+    token = jnp.minimum(token, p.shape[-1] - 1)
+    return jnp.where(degenerate, jnp.argmax(p, axis=-1).astype(jnp.int32),
+                     token.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD (state-space duality) chunked scan
+# ---------------------------------------------------------------------------
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] (i >= j),
+    -inf above the diagonal."""
+    T = x.shape[-1]
+    xx = jnp.repeat(x[..., None], T, axis=-1)        # xx[..., k, j] = x_k
+    mask = jnp.tril(jnp.ones((T, T), bool), k=-1)    # keep rows k > col j
+    xx = jnp.where(mask, xx, 0.0)
+    out = jnp.cumsum(xx, axis=-2)
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                 C: jax.Array, chunk: int = 64,
+                 initial_state: jax.Array | None = None):
+    """Chunked SSD forward (Mamba-2, arXiv:2405.21060 listing 1).
+
+    x:  (b, s, h, p)   head inputs
+    dt: (b, s, h)      positive step sizes (softplus already applied)
+    A:  (h,)           negative decay rates
+    B:  (b, s, g, n)   input projections (g groups, g | h)
+    C:  (b, s, g, n)   output projections
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)  # (b, s, h, n)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    xw = (x * dt[..., None]).astype(jnp.float32)     # dt-weighted input
+    Abar = (A[None, None, :] * dt).astype(jnp.float32)  # (b, s, h)
+
+    c = s // chunk
+    xw = xw.reshape(b, c, chunk, h, p)
+    Bh = Bh.reshape(b, c, chunk, h, n).astype(jnp.float32)
+    Ch = Ch.reshape(b, c, chunk, h, n).astype(jnp.float32)
+    Ab = Abar.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)  # (b, h, c, l)
+    A_cum = jnp.cumsum(Ab, axis=-1)                          # (b, h, c, l)
+
+    # Intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(Ab))                                 # (b, h, c, l, l)
+    Y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", Ch, Bh, L, xw)
+
+    # Chunk end-states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)          # (b, h, c, l)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bh, decay_states, xw)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+    states = jnp.concatenate([initial_state[:, None], states], axis=1)  # (b, c+1, h, p, n)
+
+    # Inter-chunk recurrence
+    chunk_decay = A_cum[..., -1]                             # (b, h, c)
+    padded = jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(padded))                   # (b, h, c+1, c+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # Inter-chunk contribution to outputs
+    state_decay_out = jnp.exp(A_cum)                         # (b, h, c, l)
+    Y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Ch, prev_states, state_decay_out)
+
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                   C: jax.Array, state: jax.Array):
+    """One-token SSD recurrence.
+
+    x: (b, h, p); dt: (b, h); A: (h,); B, C: (b, g, n); state: (b, h, p, n).
+    Returns (y (b, h, p), new_state).
+    """
+    b, h, p = x.shape
+    g, n = B.shape[1], B.shape[2]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)      # (b, h, n)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp(A[None, :] * dt)                          # (b, h)
+    upd = (dt[..., None] * x.astype(jnp.float32))[..., None] * Bh[:, :, None, :]
+    new_state = decay[..., None, None] * state + upd          # (b, h, p, n)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,109 @@
+"""Fused residual-distribution inverse-CDF sampler (paper eq. 5).
+
+The calibrated token at the first rejected position is a sample from
+normalize(max(p_L - p_S, 0)) over the vocab.  A naive implementation
+materializes the residual, its sum, and its cumsum — three extra HBM sweeps
+of (N, V).  This kernel streams the vocab tiles twice within one grid
+(phase 0: residual mass Z; phase 1: CDF crossing), carrying the running sum
+and the found-token state in VMEM scratch across the sequential TPU grid.
+
+Degenerate rows (Z == 0, i.e. p == q elementwise) fall back to argmax(p),
+matching the pure-jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, p_ref, q_ref, out_ref, z_scr, cum_scr, tok_scr, best_scr,
+            *, bv: int, n_v: int):
+    phase = pl.program_id(1)
+    vi = pl.program_id(2)
+
+    p = p_ref[...].astype(jnp.float32)            # (1, bv)
+    q = q_ref[...].astype(jnp.float32)
+    r = jnp.maximum(p - q, 0.0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, bv), 1) + vi * bv
+
+    @pl.when((phase == 0) & (vi == 0))
+    def _init():
+        z_scr[...] = jnp.zeros_like(z_scr)
+        cum_scr[...] = jnp.zeros_like(cum_scr)
+        tok_scr[...] = jnp.full_like(tok_scr, -1)
+        best_scr[...] = jnp.full_like(best_scr, -1e30)
+
+    @pl.when(phase == 0)
+    def _accumulate():
+        z_scr[0, 0] = z_scr[0, 0] + jnp.sum(r)
+        # track argmax(p) for the degenerate fallback
+        m_tile = jnp.max(p)
+        arg_tile = jnp.max(jnp.where(p == m_tile, cols, -1))
+
+        @pl.when(m_tile > best_scr[0, 0])
+        def _upd():
+            best_scr[0, 0] = m_tile
+            best_scr[0, 1] = arg_tile.astype(jnp.float32)
+
+    @pl.when(phase == 1)
+    def _pick():
+        target = u_ref[0, 0] * z_scr[0, 0]
+        prev = cum_scr[0, 0]
+        tile_cum = prev + jnp.cumsum(r[0])        # (bv,)
+        crossed = tile_cum > target
+        # first crossing column within this tile (or bv if none)
+        idx_in_tile = jnp.argmax(crossed)
+        has = jnp.any(crossed)
+
+        @pl.when(has & (tok_scr[0, 0] < 0))
+        def _record():
+            tok_scr[0, 0] = (vi * bv + idx_in_tile).astype(jnp.float32)
+
+        cum_scr[0, 0] = prev + jnp.sum(r)
+
+        @pl.when(vi == n_v - 1)
+        def _finish():
+            degenerate = z_scr[0, 0] <= 0.0
+            fallback = best_scr[0, 1]
+            picked = tok_scr[0, 0]
+            picked = jnp.where(picked < 0, fallback, picked)
+            out_ref[0, 0] = jnp.where(degenerate, fallback, picked).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bv", "interpret"))
+def residual_sample_pallas(p: jax.Array, q: jax.Array, u: jax.Array,
+                           bv: int = 2048, interpret: bool = False) -> jax.Array:
+    """p, q: (N, V) probability rows; u: (N,) uniforms -> tokens (N,) int32."""
+    N, V = p.shape
+    v_pad = (-V) % bv
+    if v_pad:
+        p = jnp.pad(p, ((0, 0), (0, v_pad)))
+        q = jnp.pad(q, ((0, 0), (0, v_pad)))
+    Vp = p.shape[1]
+    n_v = Vp // bv
+    u2d = u.astype(jnp.float32)[:, None]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bv=bv, n_v=n_v),
+        grid=(N, 2, n_v),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda ni, ph, vi: (ni, 0)),
+            pl.BlockSpec((1, bv), lambda ni, ph, vi: (ni, vi)),
+            pl.BlockSpec((1, bv), lambda ni, ph, vi: (ni, vi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda ni, ph, vi: (ni, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, 1), jnp.int32),
+        scratch_shapes=[
+            pltpu.VMEM((1, 128), jnp.float32),   # Z
+            pltpu.VMEM((1, 128), jnp.float32),   # running cumsum
+            pltpu.VMEM((1, 128), jnp.float32),   # picked token
+            pltpu.VMEM((1, 128), jnp.float32),   # (best p, argmax) fallback
+        ],
+        interpret=interpret,
+    )(u2d, p, q)
+    return out[:, 0]

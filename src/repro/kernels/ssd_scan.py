@@ -1,0 +1,119 @@
+"""Mamba-2 SSD chunked scan, Pallas TPU.
+
+One grid step processes one (batch, head, chunk) cell: the intra-chunk
+quadratic part is two small MXU matmuls ((l,n)x(n,l) and (l,l)x(l,p)); the
+inter-chunk recurrence carries the (p, n) state in VMEM scratch across the
+sequential chunk-grid axis.  This keeps the whole recurrence on-chip — the
+jnp reference materializes (b, h, c, l, l) decay tensors in HBM instead.
+
+Layout prepared by the wrapper: x (B, H, C, L, P); dt (B, H, C, L, 1);
+B/C projections (B, G, C, L, N); A (1, H) in SMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(A_ref, x_ref, dt_ref, B_ref, C_ref, init_ref, y_ref, fs_ref,
+            state_scr, *, L: int, P: int, N: int, n_c: int, has_init: bool):
+    h = pl.program_id(1)
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        if has_init:
+            state_scr[...] = init_ref[0, 0].astype(jnp.float32)
+        else:
+            state_scr[...] = jnp.zeros_like(state_scr)
+
+    a = A_ref[0, h]                                        # scalar decay rate
+    x = x_ref[0, 0, 0].astype(jnp.float32)                 # (L, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)               # (L, 1)
+    Bp = B_ref[0, 0, 0].astype(jnp.float32)                # (L, N)
+    Cp = C_ref[0, 0, 0].astype(jnp.float32)                # (L, N)
+
+    abar = a * dt                                          # (L, 1)
+    acum = jnp.cumsum(abar[:, 0])                          # (L,)
+    xw = x * dt                                            # dt-weighted input
+
+    # intra-chunk: scores[i, j] = C_i . B_j * exp(acum_i - acum_j) for j <= i
+    scores = jax.lax.dot_general(Cp, Bp, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (L, L)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.exp(acum[:, None] - acum[None, :])
+    scores = jnp.where(jj <= ii, scores * decay, 0.0)
+    y = jax.lax.dot_general(scores, xw, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # (L, P)
+
+    # inter-chunk: contribution of the carried state
+    state = state_scr[...]                                 # (P, N)
+    y = y + jnp.exp(acum)[:, None] * jax.lax.dot_general(
+        Cp, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (L, N)x(N, P)->(L, P)
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    # state update: s' = exp(acum_last) s + sum_j exp(acum_last - acum_j) xw_j B_j^T
+    w = jnp.exp(acum[-1] - acum)[:, None] * xw             # (L, P)
+    upd = jax.lax.dot_general(w, Bp, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)     # (P, N)
+    state_scr[...] = jnp.exp(acum[-1]) * state + upd
+
+    @pl.when(ci == n_c - 1)
+    def _finish():
+        fs_ref[0, 0] = state_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                    C: jax.Array, chunk: int = 64, initial_state=None,
+                    interpret: bool = False):
+    """Same contract as ref.ssd_scan_ref (seq already chunk-multiple)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    c = s // chunk
+
+    xt = x.transpose(0, 2, 1, 3).reshape(b, h, c, chunk, p)
+    dtt = dt.transpose(0, 2, 1).reshape(b, h, c, chunk, 1)
+    Bt = B.transpose(0, 2, 1, 3).reshape(b, g, c, chunk, n)
+    Ct = C.transpose(0, 2, 1, 3).reshape(b, g, c, chunk, n)
+    A2 = A.reshape(1, h).astype(jnp.float32)
+    has_init = initial_state is not None
+    init = (initial_state.astype(jnp.float32) if has_init
+            else jnp.zeros((b, h, p, n), jnp.float32))
+
+    y, fs = pl.pallas_call(
+        functools.partial(_kernel, L=chunk, P=p, N=n, n_c=c, has_init=has_init),
+        grid=(b, h, c),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                       # A
+            pl.BlockSpec((1, 1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, 1), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, n),
+                         lambda bi, hi, ci, rep=rep: (bi, hi // rep, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, n),
+                         lambda bi, hi, ci, rep=rep: (bi, hi // rep, ci, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, c, chunk, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(A2, xt, dtt, Bt, Ct, init)
+
+    y = y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    return y, fs

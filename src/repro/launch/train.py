@@ -1,0 +1,89 @@
+"""Training driver CLI.
+
+Local mode (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
+      --steps 50
+
+Production mode lowers the full config under the production mesh and (on a
+real pod) executes; on this CPU container use --dry-run, which delegates to
+launch.dryrun for lower+compile only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config, local devices")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="lower+compile under the production mesh")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        from repro.launch.dryrun import run_cell
+        res = run_cell(args.arch, "train_4k", args.multi_pod, force=True)
+        print(res.get("status"), res.get("roofline", res.get("error")))
+        return
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_config
+    from repro.models import build_model, has_prefix_embeds
+    from repro.training import (
+        DataConfig,
+        OptimizerConfig,
+        SyntheticLMDataset,
+        init_optimizer,
+        make_train_step,
+    )
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"{cfg.name}: {model.num_params(params) / 1e6:.1f}M params")
+
+    opt_cfg = OptimizerConfig(warmup_steps=10, decay_steps=args.steps)
+    opt_state = init_optimizer(opt_cfg, params)
+    data = SyntheticLMDataset(DataConfig(vocab_size=cfg.vocab_size,
+                                         seq_len=args.seq_len,
+                                         global_batch=args.batch))
+    step_fn = jax.jit(make_train_step(model, opt_cfg,
+                                      microbatches=args.microbatches,
+                                      has_prefix=has_prefix_embeds(cfg)))
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = {"tokens": jnp.asarray(data.batch(step)["tokens"])}
+        if has_prefix_embeds(cfg):
+            from repro.models.model_zoo import prefix_len
+            batch["prefix_embeds"] = jnp.zeros(
+                (args.batch, prefix_len(cfg), cfg.d_model))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss={float(metrics['loss']):.4f} "
+                  f"({time.time() - t0:.0f}s)")
+        if mgr and step and step % 50 == 0:
+            mgr.save_async(step, {"params": params, "opt": opt_state})
+    if mgr:
+        mgr.wait()
+        mgr.save(args.steps, {"params": params, "opt": opt_state})
+
+
+if __name__ == "__main__":
+    main()

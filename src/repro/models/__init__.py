@@ -1,0 +1,3 @@
+"""Pure-JAX model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM backbones."""
+
+from .model_zoo import build_model, cache_specs, has_prefix_embeds, input_specs  # noqa: F401

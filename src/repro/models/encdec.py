@@ -1,0 +1,253 @@
+"""Whisper-style encoder-decoder (audio backbone, conv frontend stubbed).
+
+Per the assignment the modality frontend is a STUB: the encoder consumes
+precomputed frame embeddings (B, T_frames, d_model).  The decoder is a causal
+transformer with cross-attention into the encoder output; decode shapes
+exercise it with a self-attention KV cache plus fixed cross-attention KV.
+Positions are learned embeddings (whisper has no RoPE).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint
+
+from .layers import (
+    attention_apply,
+    dense_init,
+    embed_init,
+    gqa_attention,
+    init_attention,
+    init_mlp,
+    make_norm,
+    mlp_apply,
+)
+from .transformer import _dtype, _stack
+
+Params = Any
+
+_MAX_DECODER_POS = 33024  # covers the decode_32k cell (+ draft window)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.init_norm, self.norm = make_norm(cfg.norm)
+
+    # ------------------------------------------------------------------
+
+    def _init_enc_block(self, key) -> Params:
+        cfg = self.cfg
+        dtype = _dtype(cfg.param_dtype)
+        ka, km = jax.random.split(key)
+        return {
+            "ln_attn": self.init_norm(cfg.d_model, dtype),
+            "attn": init_attention(ka, cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.head_dim, dtype=dtype),
+            "ln_mlp": self.init_norm(cfg.d_model, dtype),
+            "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+        }
+
+    def _init_dec_block(self, key) -> Params:
+        cfg = self.cfg
+        dtype = _dtype(cfg.param_dtype)
+        ka, kx, km = jax.random.split(key, 3)
+        return {
+            "ln_self": self.init_norm(cfg.d_model, dtype),
+            "self_attn": init_attention(ka, cfg.d_model, cfg.num_heads,
+                                        cfg.num_kv_heads, cfg.head_dim, dtype=dtype),
+            "ln_cross": self.init_norm(cfg.d_model, dtype),
+            "cross_attn": init_attention(kx, cfg.d_model, cfg.num_heads,
+                                         cfg.num_kv_heads, cfg.head_dim, dtype=dtype),
+            "ln_mlp": self.init_norm(cfg.d_model, dtype),
+            "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+        }
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dtype = _dtype(cfg.param_dtype)
+        keys = jax.random.split(key, 6)
+        enc_keys = jax.random.split(keys[0], cfg.num_encoder_layers)
+        dec_keys = jax.random.split(keys[1], cfg.num_layers)
+        return {
+            "embed": embed_init(keys[2], cfg.vocab_size, cfg.d_model, dtype),
+            "pos_embed": (jax.random.normal(keys[3], (_MAX_DECODER_POS, cfg.d_model))
+                          * 0.02).astype(dtype),
+            "enc_pos_embed": (jax.random.normal(keys[4], (cfg.encoder_seq_len, cfg.d_model))
+                              * 0.02).astype(dtype),
+            "enc_blocks": _stack([self._init_enc_block(k) for k in enc_keys]),
+            "dec_blocks": _stack([self._init_dec_block(k) for k in dec_keys]),
+            "ln_enc": self.init_norm(cfg.d_model, dtype),
+            "ln_f": self.init_norm(cfg.d_model, dtype),
+            "unembed": dense_init(keys[5], cfg.d_model, cfg.vocab_size, dtype),
+        }
+
+    # ------------------------------------------------------------------
+
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames: (B, T_frames, d_model) stub embeddings -> encoder output."""
+        cfg = self.cfg
+        x = frames.astype(_dtype(cfg.compute_dtype))
+        x = x + params["enc_pos_embed"][None, :x.shape[1]].astype(x.dtype)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+        def enc_block(p, x):
+            h = self.norm(p["ln_attn"], x)
+            attn, _ = attention_apply(
+                p["attn"], h, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.head_dim, positions=positions, mask=None,
+                rope_theta=None)
+            x = x + attn
+            h = self.norm(p["ln_mlp"], x)
+            return x + mlp_apply(p["mlp"], h, cfg.activation)
+
+        if cfg.remat:
+            enc_block = jax.checkpoint(enc_block)
+
+        def body(carry, p):
+            return enc_block(p, carry), None
+
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"],
+                            unroll=self.cfg.scan_unroll)
+        return self.norm(params["ln_enc"], x)
+
+    def _cross_kv(self, params, enc_out: jax.Array):
+        """Precompute per-layer cross-attention K/V from the encoder output."""
+        cfg = self.cfg
+        B, S, _ = enc_out.shape
+
+        def body(_, p):
+            k = (enc_out @ p["cross_attn"]["wk"]).reshape(
+                B, S, cfg.num_kv_heads, cfg.head_dim)
+            v = (enc_out @ p["cross_attn"]["wv"]).reshape(
+                B, S, cfg.num_kv_heads, cfg.head_dim)
+            return None, (k, v)
+
+        _, (ck, cv) = jax.lax.scan(body, None, params["dec_blocks"],
+                                   unroll=self.cfg.scan_unroll)
+        return ck, cv  # (L, B, S_enc, KV, D)
+
+    def _dec_block(self, p, x, positions, mask, cross_k, cross_v,
+                   kv_cache=None, offset=None):
+        cfg = self.cfg
+        h = self.norm(p["ln_self"], x)
+        attn, kv = attention_apply(
+            p["self_attn"], h, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, positions=positions, mask=mask,
+            rope_theta=None, kv_cache=kv_cache, cache_offset=offset)
+        x = x + attn
+        # cross attention: no mask (all encoder frames valid), no rope
+        h = self.norm(p["ln_cross"], x)
+        B, T, _ = h.shape
+        q = (h @ p["cross_attn"]["wq"]).reshape(B, T, cfg.num_heads, cfg.head_dim)
+        cross = gqa_attention(q, cross_k.astype(h.dtype), cross_v.astype(h.dtype), None)
+        x = x + cross.reshape(B, T, -1) @ p["cross_attn"]["wo"]
+        h = self.norm(p["ln_mlp"], x)
+        return x + mlp_apply(p["mlp"], h, cfg.activation), kv
+
+    def _decoder(self, params, tokens, cross_k, cross_v, positions, mask,
+                 cache=None, offset=None):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(_dtype(cfg.compute_dtype))
+        pos_idx = jnp.clip(positions, 0, _MAX_DECODER_POS - 1)
+        x = x + params["pos_embed"][pos_idx].astype(x.dtype)
+        use_cache = cache is not None
+
+        def dec_block(p, x, ck, cv, kv_in):
+            return self._dec_block(p, x, positions, mask, ck, cv,
+                                   kv_cache=kv_in, offset=offset)
+
+        if cfg.remat:
+            dec_block = jax.checkpoint(dec_block)
+
+        def body(carry, xs):
+            x = carry
+            if use_cache:
+                p, ck, cv, kc, vc = xs
+                x, kv = dec_block(p, x, ck, cv, (kc, vc))
+                return x, (kv[0], kv[1])
+            p, ck, cv = xs
+            x, _ = dec_block(p, x, ck, cv, None)
+            return x, None
+
+        if use_cache:
+            xs = (params["dec_blocks"], cross_k, cross_v, cache["k"], cache["v"])
+            x, (k_new, v_new) = jax.lax.scan(body, x, xs,
+                                             unroll=self.cfg.scan_unroll)
+            new_cache = dict(cache)
+            new_cache["k"], new_cache["v"] = k_new, v_new
+        else:
+            x, _ = jax.lax.scan(body, x, (params["dec_blocks"], cross_k, cross_v),
+                                unroll=self.cfg.scan_unroll)
+            new_cache = None
+        x = self.norm(params["ln_f"], x)
+        logits = (x @ params["unembed"].astype(x.dtype)).astype(jnp.float32)
+        logits = logical_constraint(logits, "batch", None, "vocab")
+        return logits, new_cache
+
+    # ------------------------------------------------------------------
+    # Unified API (frames go through ``prefix_embeds``)
+    # ------------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+        cfg = self.cfg
+        L = cfg.num_layers
+        shape = (L, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+        enc_shape = (L, batch, cfg.encoder_seq_len, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "cross_k": jnp.zeros(enc_shape, dtype),
+                "cross_v": jnp.zeros(enc_shape, dtype)}
+
+    CACHE_BATCH_AXES = {"k": 1, "v": 1, "cross_k": 1, "cross_v": 1}
+
+    def concat_caches(self, caches: list) -> Params:
+        return {key: jnp.concatenate([c[key] for c in caches],
+                                     axis=self.CACHE_BATCH_AXES[key])
+                for key in caches[0]}
+
+    def apply(self, params, tokens, prefix_embeds=None):
+        """Training forward: frames (prefix_embeds) + decoder tokens."""
+        assert prefix_embeds is not None, "whisper training needs frame embeddings"
+        enc_out = self.encode(params, prefix_embeds)
+        ck, cv = self._cross_kv(params, enc_out)
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        mask = (jnp.arange(S)[None, :] <= jnp.arange(S)[:, None])[None, None, None]
+        logits, _ = self._decoder(params, tokens, ck, cv, positions, mask)
+        return logits, jnp.zeros((), jnp.float32)
+
+    def prefill(self, params, tokens, cache, prefix_embeds=None):
+        assert prefix_embeds is not None
+        enc_out = self.encode(params, prefix_embeds)
+        ck, cv = self._cross_kv(params, enc_out)
+        cache = dict(cache)
+        cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+        cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+        B, S = tokens.shape
+        S_max = cache["k"].shape[2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        mask = (jnp.arange(S_max)[None, :] <= jnp.arange(S)[:, None])[None, None, None]
+        logits, cache = self._decoder(params, tokens, ck, cv, positions, mask,
+                                      cache=cache, offset=jnp.zeros((), jnp.int32))
+        return logits, cache, jnp.zeros((), jnp.float32)
+
+    def forward_window(self, params, tokens, cache, pos):
+        B, T = tokens.shape
+        S_max = cache["k"].shape[2]
+        positions = pos[:, None] + jnp.arange(T)[None, :]
+        kj = jnp.arange(S_max)[None, None, :]
+        mask = (kj <= positions[:, :, None])[:, None, None]
+        logits, cache = self._decoder(
+            params, tokens, cache["cross_k"], cache["cross_v"], positions, mask,
+            cache=cache, offset=pos)
+        return logits, cache
+
+    def num_params(self, params) -> int:
+        return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

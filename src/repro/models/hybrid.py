@@ -1,0 +1,208 @@
+"""Zamba2-style hybrid: Mamba-2 backbone with a shared attention block.
+
+``hybrid_group`` Mamba2 layers form a group; after each group the single
+shared transformer block (attention + MLP, one weight set) runs with its own
+per-invocation KV cache.  54 layers / group 6 -> 9 shared-block invocations.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+from .layers import (
+    attention_apply,
+    dense_init,
+    embed_init,
+    init_attention,
+    init_mlp,
+    init_rmsnorm,
+    mlp_apply,
+    rmsnorm,
+)
+from repro.distributed.sharding import logical_constraint
+
+from .ssm import init_mamba2_block, mamba2_block_apply, ssm_dims
+from .transformer import _dtype, _stack
+
+Params = Any
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.num_layers % cfg.hybrid_group == 0
+        self.num_groups = cfg.num_layers // cfg.hybrid_group
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dtype = _dtype(cfg.param_dtype)
+        k_embed, k_blocks, k_shared, k_head = jax.random.split(key, 4)
+        keys = jax.random.split(k_blocks, cfg.num_layers)
+        mamba = _stack([init_mamba2_block(k, cfg) for k in keys])
+        # regroup leading axis (L,) -> (groups, group_size)
+        mamba = jax.tree.map(
+            lambda x: x.reshape((self.num_groups, cfg.hybrid_group) + x.shape[1:]),
+            mamba)
+        ka, km = jax.random.split(k_shared)
+        shared = {
+            "ln_attn": init_rmsnorm(cfg.d_model, dtype),
+            "attn": init_attention(ka, cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.head_dim, dtype=dtype),
+            "ln_mlp": init_rmsnorm(cfg.d_model, dtype),
+            "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, cfg.activation, dtype),
+        }
+        params = {
+            "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+            "ln_f": init_rmsnorm(cfg.d_model, dtype),
+            "mamba": mamba,
+            "shared": shared,
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+        return params
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+        cfg = self.cfg
+        d_inner, nheads, g, n, conv_dim = ssm_dims(cfg)
+        L, G = cfg.num_layers, self.num_groups
+        return {
+            "ssm": jnp.zeros((G, cfg.hybrid_group, batch, nheads,
+                              cfg.ssm_head_dim, n), jnp.float32),
+            "conv": jnp.zeros((G, cfg.hybrid_group, batch,
+                               cfg.ssm_conv_width - 1, conv_dim), dtype),
+            "k": jnp.zeros((G, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((G, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        }
+
+    CACHE_BATCH_AXES = {"ssm": 2, "conv": 2, "k": 1, "v": 1}
+
+    def concat_caches(self, caches: list) -> Params:
+        return {key: jnp.concatenate([c[key] for c in caches],
+                                     axis=self.CACHE_BATCH_AXES[key])
+                for key in caches[0]}
+
+    def _shared_block(self, params, x, positions, mask, kv_cache=None, offset=None):
+        cfg = self.cfg
+        p = params["shared"]
+        h = rmsnorm(p["ln_attn"], x)
+        attn_out, kv = attention_apply(
+            p["attn"], h, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, positions=positions, mask=mask,
+            rope_theta=cfg.rope_theta, kv_cache=kv_cache, cache_offset=offset)
+        x = x + attn_out
+        h = rmsnorm(p["ln_mlp"], x)
+        return x + mlp_apply(p["mlp"], h, cfg.activation), kv
+
+    def _forward(self, params, x, positions, mask, cache=None, offset=None,
+                 decode=False):
+        cfg = self.cfg
+        use_cache = cache is not None
+
+        def mamba_body(carry, xs):
+            x = carry
+            if use_cache:
+                p, ssm_s, conv_s = xs
+            else:
+                p, ssm_s, conv_s = xs, None, None
+            fn = mamba2_block_apply
+            if cfg.remat:
+                fn = jax.checkpoint(fn, static_argnums=(2, 5))
+            x, new_ssm, new_conv = fn(p, x, cfg, ssm_s, conv_s, decode)
+            if new_ssm is None:
+                new_ssm = jnp.zeros((), jnp.float32)
+            if new_conv is None:
+                new_conv = jnp.zeros((), jnp.float32)
+            return x, (new_ssm, new_conv)
+
+        def shared_fn(x, kv_in):
+            return self._shared_block(params, x, positions, mask,
+                                      kv_cache=kv_in, offset=offset)
+
+        def shared_fn_nocache(x):
+            return self._shared_block(params, x, positions, mask)
+
+        if cfg.remat:
+            shared_fn = jax.checkpoint(shared_fn)
+            shared_fn_nocache = jax.checkpoint(shared_fn_nocache)
+
+        def group_body(carry, xs):
+            x = carry
+            if use_cache:
+                mp, ssm_s, conv_s, kc, vc = xs
+                x, (new_ssm, new_conv) = jax.lax.scan(mamba_body, x,
+                                                      (mp, ssm_s, conv_s),
+                                                      unroll=cfg.scan_unroll)
+                x, kv = shared_fn(x, (kc, vc))
+                return x, (new_ssm, new_conv, kv[0], kv[1])
+            mp = xs
+            x, _ = jax.lax.scan(mamba_body, x, mp, unroll=cfg.scan_unroll)
+            x, _ = shared_fn_nocache(x)
+            return x, jnp.zeros((), jnp.float32)
+
+        if use_cache:
+            xs = (params["mamba"], cache["ssm"], cache["conv"], cache["k"], cache["v"])
+            x, (ssm_new, conv_new, k_new, v_new) = jax.lax.scan(
+                group_body, x, xs, unroll=cfg.scan_unroll)
+            new_cache = {"ssm": ssm_new, "conv": conv_new, "k": k_new, "v": v_new}
+        else:
+            x, _ = jax.lax.scan(group_body, x, params["mamba"],
+                                unroll=cfg.scan_unroll)
+            new_cache = None
+        return x, new_cache
+
+    def _logits(self, params, x):
+        x = rmsnorm(params["ln_f"], x)
+        w = params["embed"].T if self.cfg.tie_embeddings else params["unembed"]
+        logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+        return logical_constraint(logits, "batch", None, "vocab")
+
+    def apply(self, params, tokens, prefix_embeds=None):
+        x = params["embed"][tokens].astype(_dtype(self.cfg.compute_dtype))
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        mask = (jnp.arange(S)[None, :] <= jnp.arange(S)[:, None])[None, None, None]
+        x, _ = self._forward(params, x, positions, mask)
+        return self._logits(params, x), jnp.zeros((), jnp.float32)
+
+    def prefill(self, params, tokens, cache, prefix_embeds=None):
+        x = params["embed"][tokens].astype(_dtype(self.cfg.compute_dtype))
+        B, S, _ = x.shape
+        S_max = cache["k"].shape[2]  # (G, B, S_max, KV, D)
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        mask = (jnp.arange(S_max)[None, :] <= jnp.arange(S)[:, None])[None, None, None]
+        offset = jnp.zeros((), jnp.int32)
+        x, cache = self._forward(params, x, positions, mask, cache=cache,
+                                 offset=offset)
+        return self._logits(params, x), cache, jnp.zeros((), jnp.float32)
+
+    def forward_window(self, params, tokens, cache, pos, return_snapshots=False):
+        B, T = tokens.shape
+        S_max = cache["k"].shape[2]  # (G, B, S_max, KV, D)
+        logits_steps, snaps = [], []
+        for t in range(T):
+            x = params["embed"][tokens[:, t:t + 1]].astype(
+                _dtype(self.cfg.compute_dtype))
+            positions = (pos + t)[:, None]
+            kj = jnp.arange(S_max)[None, None, :]
+            mask = (kj <= positions[:, :, None])[:, None, None]
+            x, cache = self._forward(params, x, positions, mask, cache=cache,
+                                     offset=pos + t, decode=True)
+            logits_steps.append(self._logits(params, x))
+            if return_snapshots:
+                # KV entries are rollback-free (masked by pos); only the SSM
+                # recurrent state needs per-step snapshots.
+                snaps.append({"ssm": cache["ssm"], "conv": cache["conv"]})
+        logits = jnp.concatenate(logits_steps, axis=1)
+        if return_snapshots:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *snaps)
+            return logits, cache, stacked
+        return logits, cache
+
+    def num_params(self, params) -> int:
+        return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

@@ -1,0 +1,332 @@
+"""Shared pure-JAX building blocks for the model zoo.
+
+All modules follow the functional convention:
+    init_*(key, cfg, ...) -> params (pytree of jnp arrays)
+    *_apply(params, x, ...) -> output
+
+Parameters are plain nested dicts so they compose with jax.lax.scan
+(stacked leading layer axis), pjit shardings, and our checkpoint layer
+without any framework dependency.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any  # nested dict pytree
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype), "bias": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return init_rmsnorm, rmsnorm
+    if kind == "layernorm":
+        return init_layernorm, layernorm
+    raise ValueError(f"unknown norm {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Grouped-query attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, qkv_bias: bool = False, dtype=jnp.float32) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(kk, d_model, num_kv_heads * head_dim, dtype),
+        "wv": dense_init(kv, d_model, num_kv_heads * head_dim, dtype),
+        "wo": dense_init(ko, num_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype=dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype=dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype=dtype)
+    return p
+
+
+def _project_qkv(params: Params, x: jax.Array, num_heads: int, num_kv_heads: int,
+                 head_dim: int):
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, num_heads, head_dim)
+    k = k.reshape(B, S, num_kv_heads, head_dim)
+    v = v.reshape(B, S, num_kv_heads, head_dim)
+    return q, k, v
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: jax.Array | None, scale: float | None = None) -> jax.Array:
+    """Grouped-query attention core (XLA path).
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KV, D); mask broadcastable to
+    (B, KV, G, Sq, Skv) or None.  Returns (B, Sq, H, D).
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, Sq, KV, G, D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    # keep the O(S^2) score tensor sharded: batch over data axes, kv-heads
+    # (or query-heads / query-seq fallback) over model; no-op without a mesh
+    from repro.distributed.sharding import constrain_attention_scores
+    logits = constrain_attention_scores(logits)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, Sq, H, D)
+
+
+def update_kv_cache(cache: jax.Array, new: jax.Array, offset) -> jax.Array:
+    """Write ``new`` (B, T, KV, D) into ``cache`` (B, S, KV, D) at ``offset``.
+
+    ``offset`` may be a scalar (all rows aligned: prefill) or per-row (B,)
+    (decode / speculative verification with heterogeneous prefix lengths —
+    lowered by XLA to a scatter).
+    """
+    new = new.astype(cache.dtype)
+    offset = jnp.asarray(offset)
+    if offset.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache, new, offset, axis=1)
+    zero = jnp.zeros((), jnp.int32)
+    return jax.vmap(
+        lambda c, n, o: jax.lax.dynamic_update_slice(c, n, (o, zero, zero))
+    )(cache, new, offset.astype(jnp.int32))
+
+
+def causal_mask(Sq: int, Skv: int, offset: int = 0) -> jax.Array:
+    """(1, 1, 1, Sq, Skv) boolean mask: query i attends to kv j <= i+offset."""
+    qi = jnp.arange(Sq)[:, None] + offset
+    kj = jnp.arange(Skv)[None, :]
+    return (kj <= qi)[None, None, None]
+
+
+def attention_apply(params: Params, x: jax.Array, *, num_heads: int,
+                    num_kv_heads: int, head_dim: int, positions: jax.Array,
+                    mask: jax.Array | None, rope_theta: float | None,
+                    kv_cache: tuple[jax.Array, jax.Array] | None = None,
+                    cache_offset: jax.Array | int | None = None):
+    """Full attention layer. If kv_cache=(k_cache, v_cache) is given, new keys
+    and values are written at ``cache_offset`` and attention runs over the
+    whole cache (decode / chunked-prefill path). Returns (out, (k, v)) where
+    (k, v) is the updated cache (or the fresh keys/values when no cache)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim)
+    if rope_theta is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    if kv_cache is not None:
+        k_cache, v_cache = kv_cache
+        k_cache = update_kv_cache(k_cache, k, cache_offset)
+        v_cache = update_kv_cache(v_cache, v, cache_offset)
+        k, v = k_cache, v_cache
+    out = gqa_attention(q, k, v, mask)
+    out = out.reshape(B, S, num_heads * head_dim) @ params["wo"]
+    return out, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(k1, d_model, d_ff, dtype),
+                "w_up": dense_init(k2, d_model, d_ff, dtype),
+                "w_down": dense_init(k3, d_ff, d_model, dtype)}
+    return {"w_up": dense_init(k1, d_model, d_ff, dtype),
+            "w_down": dense_init(k2, d_ff, d_model, dtype)}
+
+
+def mlp_apply(params: Params, x: jax.Array, activation: str) -> jax.Array:
+    if activation == "swiglu":
+        return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]
+    if activation == "geglu":
+        return (jax.nn.gelu(x @ params["w_gate"], approximate=True)
+                * (x @ params["w_up"])) @ params["w_down"]
+    if activation == "gelu":
+        return jax.nn.gelu(x @ params["w_up"], approximate=True) @ params["w_down"]
+    raise ValueError(f"unknown activation {activation}")
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based dispatch with capacity)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden
+    activation: str = "swiglu"
+    capacity_factor: float = 1.25
+    num_shared_experts: int = 0    # always-on shared experts (DeepSeek style)
+    shared_d_ff: int = 0
+    dense_residual: bool = False   # Arctic-style parallel dense MLP
+    dense_d_ff: int = 0
+
+
+def init_moe(key, d_model: int, mcfg: MoEConfig, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, 6)
+    E, F = mcfg.num_experts, mcfg.d_ff
+    scale = 1.0 / np.sqrt(d_model)
+    p = {
+        "router": dense_init(keys[0], d_model, E, dtype=jnp.float32),
+        "w_gate": (jax.random.normal(keys[1], (E, d_model, F)) * scale).astype(dtype),
+        "w_up": (jax.random.normal(keys[2], (E, d_model, F)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(keys[3], (E, F, d_model)) / np.sqrt(F)).astype(dtype),
+    }
+    if mcfg.num_shared_experts > 0:
+        p["shared"] = init_mlp(keys[4], d_model,
+                               mcfg.shared_d_ff or F * mcfg.num_shared_experts,
+                               mcfg.activation, dtype)
+    if mcfg.dense_residual:
+        p["dense"] = init_mlp(keys[5], d_model, mcfg.dense_d_ff or F,
+                              mcfg.activation, dtype)
+    return p
+
+
+def moe_apply(params: Params, x: jax.Array, mcfg: MoEConfig,
+              capacity_factor: float | None = None) -> tuple[jax.Array, jax.Array]:
+    """Sort-based top-k MoE dispatch (capacity-dropped, GShard-style).
+
+    x: (B, S, d). Returns (out, aux_loss) where aux_loss is the load-balancing
+    loss of Switch Transformers.
+    """
+    B, S, d = x.shape
+    E, K = mcfg.num_experts, mcfg.top_k
+    cf = capacity_factor if capacity_factor is not None else mcfg.capacity_factor
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)             # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Load-balancing aux loss (Switch eq. 4).
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    # --- sort-based dispatch, gather-only on the (.., d) tensors ---
+    # SPMD partitions gathers far better than scatters (a scatter into a
+    # sharded (E*C, d) buffer makes GSPMD replicate one-hot u32 machinery of
+    # the same size); the scatters below touch only O(E*C) int32/bool rows.
+    from repro.distributed.sharding import logical_constraint
+
+    C = int(np.ceil(T * K / E * cf))
+    flat_expert = expert_idx.reshape(-1)                        # (T*K,)
+    flat_token = jnp.repeat(jnp.arange(T), K)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+    # position of each routed item within its expert's run
+    first_occurrence = jnp.searchsorted(sorted_expert, sorted_expert, side="left")
+    pos_in_expert = jnp.arange(T * K) - first_occurrence
+    keep = pos_in_expert < C
+    slot = jnp.where(keep, sorted_expert * C + pos_in_expert, E * C)  # E*C = drop bin
+
+    # NOTE(§Perf log): three dispatch variants were measured on the arctic
+    # train cell — plain scatter (81.7 GB/chip), scatter+expert-constraint
+    # (113.6 GB), gather-only+constraint (280 GB).  GSPMD replicates scatter
+    # one-hot machinery either way; plain scatter without constraints is the
+    # best current baseline, ragged/shard_map dispatch is future work.
+    buf = jnp.zeros((E * C + 1, d), dtype=x.dtype).at[slot].set(xt[sorted_token])
+    buf = buf[:-1].reshape(E, C, d)
+
+    if mcfg.activation in ("swiglu", "geglu"):
+        act = jax.nn.silu if mcfg.activation == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, params["w_up"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"]).reshape(E * C, d)
+    out_buf = jnp.concatenate([out_buf, jnp.zeros((1, d), out_buf.dtype)], axis=0)
+
+    contrib = out_buf[slot] * (sorted_gate * keep)[:, None].astype(x.dtype)
+    yt = jax.ops.segment_sum(contrib, sorted_token, num_segments=T)
+
+    y = yt.reshape(B, S, d)
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], x, mcfg.activation)
+    if "dense" in params:
+        y = y + mlp_apply(params["dense"], x, mcfg.activation)
+    return y, aux

@@ -1,0 +1,88 @@
+"""Model dispatch + input specs for every (arch x shape) cell.
+
+``build_model(cfg)`` returns an object with the unified functional API:
+
+    init(key) -> params
+    apply(params, tokens, prefix_embeds=None) -> (logits, aux_loss)
+    init_cache(batch, max_len, dtype) -> cache
+    prefill(params, tokens, cache, prefix_embeds=None) -> (logits, cache, aux)
+    forward_window(params, tokens, cache, pos) -> (logits, cache)
+
+``input_specs(cfg, shape)`` yields jax.ShapeDtypeStruct stand-ins for the
+step functions of the dry-run (no device allocation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SHAPES, InputShape
+
+from .encdec import EncDecLM
+from .hybrid import HybridLM
+from .ssm import MambaLM
+from .transformer import DecoderLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def has_prefix_embeds(cfg: ModelConfig) -> bool:
+    return cfg.family in ("vlm", "audio")
+
+
+def prefix_len(cfg: ModelConfig) -> int:
+    if cfg.family == "vlm":
+        return cfg.num_patches
+    if cfg.family == "audio":
+        return cfg.encoder_seq_len
+    return 0
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape | str,
+                compute_dtype=jnp.bfloat16, per_pod_batch: bool = False,
+                draft_window: int = 0) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell.
+
+    * train/prefill: {"tokens", ["prefix_embeds"]}
+    * decode:       {"tokens" (B, 1+draft_window), "pos" (B,)} (cache specs
+      are produced separately since they depend on the model object)
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    specs = {}
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.family == "vlm":
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), compute_dtype)
+        elif cfg.family == "audio":
+            specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq_len, cfg.d_model), compute_dtype)
+    else:  # decode
+        T = 1 + draft_window
+        specs["tokens"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+        specs["pos"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape | str,
+                dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStructs of the KV/SSM cache for a decode cell."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    model = build_model(cfg)
+    max_len = shape.seq_len + prefix_len(cfg)
+    return jax.eval_shape(lambda: model.init_cache(shape.global_batch, max_len,
+                                                   dtype))

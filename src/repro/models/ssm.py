@@ -1,0 +1,220 @@
+"""Mamba-2 (SSD) attention-free language model.
+
+Block layout follows the Mamba-2 paper: in_proj -> (z | xBC | dt), short causal
+depthwise conv over xBC, SSD scan, gated RMSNorm, out_proj.  Full-sequence
+forwards use the chunked SSD algorithm (``kernels.ref.ssd_scan_ref`` or the
+Pallas kernel); decode uses the O(1) recurrence with (ssm state, conv state)
+carried in the cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from repro.kernels import ops as kops
+
+from .layers import dense_init, embed_init, init_rmsnorm, rmsnorm
+from .transformer import _dtype, _stack
+
+Params = Any
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    g = cfg.ssm_ngroups
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * g * n
+    return d_inner, nheads, g, n, conv_dim
+
+
+def init_mamba2_block(key, cfg: ModelConfig) -> Params:
+    dtype = _dtype(cfg.param_dtype)
+    d_inner, nheads, g, n, conv_dim = ssm_dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * g * n + nheads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "ln": init_rmsnorm(cfg.d_model, dtype),
+        "in_proj": dense_init(k1, cfg.d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv_width, conv_dim))
+                   / np.sqrt(cfg.ssm_conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(dtype),
+        "D": jnp.ones((nheads,), dtype),
+        "dt_bias": jnp.zeros((nheads,), dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(k3, d_inner, cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal 1-D conv.  x: (B, S, C); w: (W, C).
+
+    Returns (y (B, S, C), new_state (B, W-1, C)) where state carries the last
+    W-1 inputs for streaming decode.
+    """
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xw = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xw[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xw[:, -(W - 1):] if W > 1 else state
+    return y + b, new_state
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, scale: jax.Array,
+                   eps: float = 1e-6) -> jax.Array:
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba2_block_apply(p: Params, x: jax.Array, cfg: ModelConfig,
+                       ssm_state: jax.Array | None = None,
+                       conv_state: jax.Array | None = None,
+                       decode: bool = False):
+    """x: (B, S, d_model).  Returns (out, new_ssm_state, new_conv_state)."""
+    d_inner, nheads, g, n, conv_dim = ssm_dims(cfg)
+    B_, S, _ = x.shape
+    h = rmsnorm(p["ln"], x)
+    zxbcdt = h @ p["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    xBC, new_conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xs, Bs, Cs = jnp.split(xBC, [d_inner, d_inner + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(B_, S, nheads, cfg.ssm_head_dim)
+    Bh = Bs.reshape(B_, S, g, n)
+    Ch = Cs.reshape(B_, S, g, n)
+
+    if decode:
+        assert S == 1
+        y, new_state = kops.ssd_decode(
+            xh[:, 0], dt[:, 0], A, Bh[:, 0], Ch[:, 0],
+            ssm_state if ssm_state is not None
+            else jnp.zeros((B_, nheads, cfg.ssm_head_dim, n), jnp.float32))
+        y = y[:, None]
+    else:
+        y, new_state = kops.ssd_scan(xh, dt, A, Bh, Ch, chunk=cfg.ssm_chunk,
+                                     initial_state=ssm_state)
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, d_inner)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    return x + y @ p["out_proj"], new_state, new_conv_state
+
+
+class MambaLM:
+    """Attention-free Mamba-2 LM (mamba2-130m family)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dtype = _dtype(cfg.param_dtype)
+        k_embed, k_blocks, k_head = jax.random.split(key, 3)
+        keys = jax.random.split(k_blocks, cfg.num_layers)
+        params = {
+            "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+            "ln_f": init_rmsnorm(cfg.d_model, dtype),
+            "blocks": _stack([init_mamba2_block(k, cfg) for k in keys]),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+        return params
+
+    def init_cache(self, batch: int, max_len: int = 0, dtype=jnp.bfloat16) -> Params:
+        """SSM cache is O(1) in sequence length (max_len unused, kept for API
+        parity with attention models)."""
+        cfg = self.cfg
+        d_inner, nheads, g, n, conv_dim = ssm_dims(cfg)
+        L = cfg.num_layers
+        return {
+            "ssm": jnp.zeros((L, batch, nheads, cfg.ssm_head_dim, n), jnp.float32),
+            "conv": jnp.zeros((L, batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+        }
+
+    CACHE_BATCH_AXES = {"ssm": 1, "conv": 1}
+
+    def concat_caches(self, caches: list) -> Params:
+        return {key: jnp.concatenate([c[key] for c in caches],
+                                     axis=self.CACHE_BATCH_AXES[key])
+                for key in caches[0]}
+
+    def _stack_forward(self, params, x, cache=None, decode=False):
+        cfg = self.cfg
+        use_cache = cache is not None
+
+        def body(carry, xs):
+            x = carry
+            if use_cache:
+                p, ssm_s, conv_s = xs
+            else:
+                p, ssm_s, conv_s = xs, None, None
+            fn = mamba2_block_apply
+            if cfg.remat:
+                fn = jax.checkpoint(fn, static_argnums=(2, 5))
+            x, new_ssm, new_conv = fn(p, x, cfg, ssm_s, conv_s, decode)
+            if new_ssm is None:
+                new_ssm = jnp.zeros((), jnp.float32)
+            if new_conv is None:
+                new_conv = jnp.zeros((), jnp.float32)
+            return x, (new_ssm, new_conv)
+
+        xs = ((params["blocks"], cache["ssm"], cache["conv"]) if use_cache
+              else params["blocks"])
+        x, (ssm_new, conv_new) = jax.lax.scan(body, x, xs,
+                                              unroll=cfg.scan_unroll)
+        new_cache = {"ssm": ssm_new, "conv": conv_new} if use_cache else None
+        return x, new_cache
+
+    def _logits(self, params, x):
+        x = rmsnorm(params["ln_f"], x)
+        w = params["embed"].T if self.cfg.tie_embeddings else params["unembed"]
+        logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+        return logical_constraint(logits, "batch", None, "vocab")
+
+    def apply(self, params, tokens, prefix_embeds=None):
+        x = params["embed"][tokens].astype(_dtype(self.cfg.compute_dtype))
+        x, _ = self._stack_forward(params, x)
+        return self._logits(params, x), jnp.zeros((), jnp.float32)
+
+    def prefill(self, params, tokens, cache, prefix_embeds=None):
+        x = params["embed"][tokens].astype(_dtype(self.cfg.compute_dtype))
+        x, cache = self._stack_forward(params, x, cache=cache)
+        return self._logits(params, x), cache, jnp.zeros((), jnp.float32)
+
+    def forward_window(self, params, tokens, cache, pos, return_snapshots=False):
+        """SSM decode is strictly sequential: unroll T steps of the
+        recurrence (T is the small draft window, not the context).
+
+        With return_snapshots=True also returns the cache after EVERY step
+        (leading axis T) — speculative verification rolls the state back to
+        the accepted position by selecting a snapshot per row.
+        """
+        B, T = tokens.shape
+        logits_steps, snaps = [], []
+        for t in range(T):
+            x = params["embed"][tokens[:, t:t + 1]].astype(
+                _dtype(self.cfg.compute_dtype))
+            x, cache = self._stack_forward(params, x, cache=cache, decode=True)
+            logits_steps.append(self._logits(params, x))
+            if return_snapshots:
+                snaps.append(cache)
+        logits = jnp.concatenate(logits_steps, axis=1)
+        if return_snapshots:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *snaps)
+            return logits, cache, stacked
+        return logits, cache
+
+    def num_params(self, params) -> int:
+        return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

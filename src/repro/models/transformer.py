@@ -1,0 +1,312 @@
+"""Decoder-only transformer LM (dense / MoE / VLM-backbone).
+
+One unified forward covers all serving modes:
+
+  * ``apply``        — full causal forward (training / scoring), no cache
+  * ``prefill``      — forward that also writes the KV cache
+  * ``forward_window`` — T new tokens against an existing cache at per-row
+    offsets: T=1 is decode, T=L+1 is batched speculative verification (the
+    paper's server-side op)
+
+Layers are stacked on a leading axis and traversed with ``jax.lax.scan`` so
+the lowered HLO stays O(1) in depth (fast multi-pod compiles, clean remat).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+from repro.distributed.sharding import logical_constraint
+
+from .layers import (
+    MoEConfig,
+    attention_apply,
+    dense_init,
+    embed_init,
+    init_attention,
+    init_mlp,
+    init_moe,
+    make_norm,
+    mlp_apply,
+    moe_apply,
+)
+
+Params = Any
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+class DecoderLM:
+    """Functional decoder-only LM parameterized by ``ModelConfig``."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.init_norm, self.norm = make_norm(cfg.norm)
+        self.moe_cfg = None
+        if cfg.num_experts:
+            self.moe_cfg = MoEConfig(
+                num_experts=cfg.num_experts, top_k=cfg.top_k, d_ff=cfg.moe_d_ff,
+                activation=cfg.activation, capacity_factor=cfg.capacity_factor,
+                num_shared_experts=cfg.num_shared_experts,
+                shared_d_ff=cfg.shared_d_ff, dense_residual=cfg.dense_residual,
+                dense_d_ff=cfg.d_ff,
+            )
+
+    @property
+    def no_drop_capacity(self) -> float:
+        """Capacity factor at which dropping is impossible (C = T tokens):
+        cf = E / k since C = ceil(T k / E * cf)."""
+        assert self.moe_cfg is not None
+        return self.moe_cfg.num_experts / self.moe_cfg.top_k
+
+    # ------------------------------------------------------------------
+    # Parameters
+    # ------------------------------------------------------------------
+
+    def _init_block(self, key, moe: bool) -> Params:
+        cfg = self.cfg
+        dtype = _dtype(cfg.param_dtype)
+        k_attn, k_mlp = jax.random.split(key)
+        p = {
+            "ln_attn": self.init_norm(cfg.d_model, dtype),
+            "attn": init_attention(k_attn, cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.head_dim,
+                                   qkv_bias=cfg.qkv_bias, dtype=dtype),
+            "ln_mlp": self.init_norm(cfg.d_model, dtype),
+        }
+        if moe:
+            p["moe"] = init_moe(k_mlp, cfg.d_model, self.moe_cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(k_mlp, cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+        return p
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dtype = _dtype(cfg.param_dtype)
+        k_embed, k_blocks, k_head, k_extra = jax.random.split(key, 4)
+        n_dense = cfg.first_k_dense if cfg.num_experts else cfg.num_layers
+        n_moe = cfg.num_layers - n_dense if cfg.num_experts else 0
+        if not cfg.num_experts:
+            n_dense, n_moe = 0, 0  # all layers homogeneous, stacked below
+
+        params: Params = {
+            "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+            "ln_f": self.init_norm(cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+
+        if cfg.num_experts:
+            if n_dense:
+                keys = jax.random.split(k_extra, n_dense)
+                params["dense_blocks"] = _stack([self._init_block(k, moe=False)
+                                                 for k in keys])
+            keys = jax.random.split(k_blocks, n_moe)
+            params["blocks"] = _stack([self._init_block(k, moe=True) for k in keys])
+        else:
+            keys = jax.random.split(k_blocks, cfg.num_layers)
+            params["blocks"] = _stack([self._init_block(k, moe=False) for k in keys])
+        return params
+
+    # ------------------------------------------------------------------
+    # Cache
+    # ------------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+        cfg = self.cfg
+        n_scan = cfg.num_layers - (cfg.first_k_dense if cfg.num_experts else 0)
+        n_dense = cfg.first_k_dense if cfg.num_experts else 0
+        shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+        cache = {"k": jnp.zeros((n_scan,) + shape, dtype),
+                 "v": jnp.zeros((n_scan,) + shape, dtype)}
+        if n_dense:
+            cache["dense_k"] = jnp.zeros((n_dense,) + shape, dtype)
+            cache["dense_v"] = jnp.zeros((n_dense,) + shape, dtype)
+        return cache
+
+    def cache_spec(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len, dtype))
+
+    CACHE_BATCH_AXES = {"k": 1, "v": 1, "dense_k": 1, "dense_v": 1}
+
+    def concat_caches(self, caches: list) -> Params:
+        """Stack per-row caches (ragged prefill) into one batch."""
+        return {key: jnp.concatenate([c[key] for c in caches],
+                                     axis=self.CACHE_BATCH_AXES[key])
+                for key in caches[0]}
+
+    # ------------------------------------------------------------------
+    # Forward
+    # ------------------------------------------------------------------
+
+    def _block_apply(self, p: Params, x, *, moe: bool, positions, mask,
+                     kv_cache=None, offset=None, moe_capacity=None):
+        cfg = self.cfg
+        h = self.norm(p["ln_attn"], x)
+        attn_out, kv = attention_apply(
+            p["attn"], h, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, positions=positions, mask=mask,
+            rope_theta=cfg.rope_theta, kv_cache=kv_cache, cache_offset=offset)
+        x = x + attn_out
+        h = self.norm(p["ln_mlp"], x)
+        if moe:
+            mlp_out, aux = moe_apply(p["moe"], h, self.moe_cfg,
+                                     capacity_factor=moe_capacity)
+        else:
+            mlp_out, aux = mlp_apply(p["mlp"], h, cfg.activation), jnp.zeros((), jnp.float32)
+        return x + mlp_out, kv, aux
+
+    def _stack_forward(self, params, x, positions, mask, cache=None, offset=None,
+                       moe_capacity=None):
+        """Run all blocks; returns (hidden, new_cache, aux_sum)."""
+        cfg = self.cfg
+        use_cache = cache is not None
+
+        def block_fn(p, x, kv_in):
+            # positions/mask/offset are closure-captured: they carry no
+            # gradient, and jax.checkpoint must not trace the python-bool
+            # configuration kwargs.
+            return self._block_apply(p, x, moe=self.moe_cfg is not None,
+                                     positions=positions, mask=mask,
+                                     kv_cache=kv_in, offset=offset,
+                                     moe_capacity=moe_capacity)
+
+        if cfg.remat:
+            block_fn = jax.checkpoint(block_fn)
+
+        def scan_body(carry, xs):
+            x = carry
+            if use_cache:
+                p, kc, vc = xs
+                kv_in = (kc, vc)
+            else:
+                p = xs
+                kv_in = None
+            x, kv, aux = block_fn(p, x, kv_in)
+            return x, (kv[0], kv[1], aux)
+
+        new_cache = dict(cache) if use_cache else None
+        aux_total = jnp.zeros((), jnp.float32)
+
+        # Leading dense blocks (MoE stacks with first_k_dense > 0).
+        if "dense_blocks" in params:
+            def dense_body(carry, xs):
+                x = carry
+                if use_cache:
+                    p, kc, vc = xs
+                    kv_in = (kc, vc)
+                else:
+                    p = xs
+                    kv_in = None
+                x, kv, aux = self._block_apply(
+                    p, x, moe=False, positions=positions, mask=mask,
+                    kv_cache=kv_in, offset=offset)
+                return x, (kv[0], kv[1], aux)
+
+            xs = ((params["dense_blocks"], cache["dense_k"], cache["dense_v"])
+                  if use_cache else params["dense_blocks"])
+            x, (dk, dv, aux) = jax.lax.scan(dense_body, x, xs,
+                                            unroll=cfg.scan_unroll)
+            aux_total += jnp.sum(aux)
+            if use_cache:
+                new_cache["dense_k"], new_cache["dense_v"] = dk, dv
+
+        xs = ((params["blocks"], cache["k"], cache["v"]) if use_cache
+              else params["blocks"])
+        x, (k_new, v_new, aux) = jax.lax.scan(scan_body, x, xs,
+                                              unroll=cfg.scan_unroll)
+        aux_total += jnp.sum(aux)
+        if use_cache:
+            new_cache["k"], new_cache["v"] = k_new, v_new
+        return x, new_cache, aux_total
+
+    def _embed(self, params, tokens, prefix_embeds=None):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(_dtype(cfg.compute_dtype))
+        if prefix_embeds is not None:
+            x = jnp.concatenate(
+                [prefix_embeds.astype(x.dtype), x], axis=1)
+        return x
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = self.norm(params["ln_f"], x)
+        w = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+        logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+        return logical_constraint(logits, "batch", None, "vocab")
+
+    def apply(self, params, tokens, prefix_embeds=None, moe_capacity=None):
+        """Full causal forward. tokens: (B, S) -> logits (B, S[+P], V)."""
+        x = self._embed(params, tokens, prefix_embeds)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        qi = jnp.arange(S)[:, None]
+        kj = jnp.arange(S)[None, :]
+        mask = (kj <= qi)[None, None, None]
+        x, _, aux = self._stack_forward(params, x, positions, mask,
+                                        moe_capacity=moe_capacity)
+        return self._logits(params, x), aux
+
+    def prefill(self, params, tokens, cache, prefix_embeds=None,
+                moe_capacity="no_drop"):
+        """Causal forward writing the KV cache at offset 0.
+
+        MoE dispatch defaults to exact no-drop capacity: serving prefill
+        batches are modest (K devices x prompt) and the cache must reflect
+        the exact model for verification to stay exact.  Pass an explicit
+        capacity factor for throughput-oriented bulk prefill.
+        """
+        if moe_capacity == "no_drop":
+            moe_capacity = self.no_drop_capacity if self.moe_cfg else None
+        x = self._embed(params, tokens, prefix_embeds)
+        B, S, _ = x.shape
+        S_max = cache["k"].shape[2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        qi = jnp.arange(S)[:, None]
+        kj = jnp.arange(S_max)[None, :]
+        mask = (kj <= qi)[None, None, None]
+        offset = jnp.zeros((), jnp.int32)
+        x, cache, aux = self._stack_forward(params, x, positions, mask,
+                                            cache=cache, offset=offset,
+                                            moe_capacity=moe_capacity)
+        return self._logits(params, x), cache, aux
+
+    def forward_window(self, params, tokens, cache, pos):
+        """T new tokens against an existing cache.
+
+        tokens: (B, T); pos: (B,) per-row write offsets (current lengths).
+        T=1 -> decode step; T=L+1 -> speculative-verification scoring.
+        Returns (logits (B, T, V), new_cache).
+
+        MoE layers dispatch with NO-DROP capacity here (cf = E/k => capacity =
+        num window tokens): speculative verification must score with the exact
+        model distribution, and capacity dropping is batch-coupled.  Training
+        and prefill keep the configured capacity factor (DESIGN.md §3).
+        """
+        x = self._embed(params, tokens)
+        B, T, _ = x.shape
+        S_max = cache["k"].shape[2]
+        positions = pos[:, None] + jnp.arange(T)[None, :]
+        kj = jnp.arange(S_max)[None, None, :]
+        mask = (kj <= positions[:, :, None])[:, None, None]  # (B,1,1,T,S)
+        moe_capacity = self.no_drop_capacity if self.moe_cfg else None
+        x, cache, _ = self._stack_forward(params, x, positions, mask,
+                                          cache=cache, offset=pos,
+                                          moe_capacity=moe_capacity)
+        return self._logits(params, x), cache
+
+    def num_params(self, params) -> int:
+        return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def _stack(trees: list[Params]) -> Params:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)

@@ -1,0 +1,178 @@
+"""Roofline-term derivation from compiled XLA artifacts.
+
+Three terms per (arch x shape x mesh) cell (assignment §Roofline):
+
+  compute_s    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory_s     = HLO_bytes / (chips * HBM_bw)
+  collective_s = per-chip collective bytes / link_bw
+               ( == global collective bytes / (chips * link_bw), since the
+                 partitioned HLO prints per-device shapes )
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes; the partitioned HLO
+text for collective operand sizes (cost_analysis does not expose them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+# TPU v5e hardware constants (assignment)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_LINK_BW = 50e9                # bytes/s per link
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# result/operand type like  bf16[16,512,128]{2,1,0:T(8,128)}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\(|\w+\[)[^=]*?)\s+(" + "|".join(COLLECTIVE_OPS) + r")[\.\(]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_op: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result sizes of every collective in the (partitioned) HLO.
+
+    Shapes in partitioned HLO are per-device, so the sums are per-chip
+    traffic volumes.
+    """
+    counts = {op: 0 for op in COLLECTIVE_OPS}
+    byte_tot = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_types, op = m.group(1), m.group(2)
+        if f" {op}" not in line and f"{op}(" not in line:
+            continue
+        counts[op] += 1
+        for dtype, dims in _SHAPE_RE.findall(result_types):
+            byte_tot[op] += _shape_bytes(dtype, dims)
+    return CollectiveStats(counts=counts, bytes_by_op=byte_tot)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes_per_chip: float
+    collective_counts: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    flops_ratio: float            # MODEL_FLOPS / HLO_FLOPs (useful fraction)
+    bottleneck: str
+    peak_fraction: float          # useful-FLOPs time / bound-time (roofline frac)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline(arch: str, shape: str, mesh_name: str, chips: int,
+             cost: dict, hlo_text: str, model_flops: float) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    # cost_analysis reports 'bytes accessed' under various keys per backend
+    byte_keys = [k for k in cost if "bytes accessed" in k]
+    hbm_bytes = float(cost.get("bytes accessed", 0.0)) or \
+        float(sum(cost[k] for k in byte_keys))
+    coll = parse_collectives(hlo_text)
+
+    # cost_analysis flops on the partitioned module are per-device for CPU
+    # SPMD; normalize to per-chip terms.
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = coll.total_bytes / ICI_LINK_BW
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful_s = (model_flops / chips) / PEAK_FLOPS_BF16
+    bound = max(terms.values())
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=hbm_bytes,
+        collective_bytes_per_chip=float(coll.total_bytes),
+        collective_counts=coll.counts,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops=model_flops,
+        flops_ratio=(model_flops / chips) / flops if flops else 0.0,
+        bottleneck=bottleneck,
+        peak_fraction=useful_s / bound if bound else 0.0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (6ND rule; MoE uses active parameters)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, shape, n_params: int, n_active_params: int | None = None) -> float:
+    """6 * N * D for training; 2 * N * D for a forward-only step.
+
+    decode steps process global_batch tokens (one per row); prefill/train
+    process batch*seq tokens.
+    """
+    n = n_active_params if n_active_params is not None else n_params
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one new token per row
+    return 2.0 * n * tokens
+
+
+def count_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts from the config (no allocation)."""
+    import jax
+
+    from repro.models import build_model
+
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    if not cfg.num_experts:
+        return total, total
+    # active = total - (routed expert params) * (1 - top_k/E)
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    expert_params = 0
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", "")) for p in path]
+        if "moe" in keys and any(k in ("w_gate", "w_up", "w_down") for k in keys):
+            expert_params += int(np.prod(leaf.shape))
+    active = total - expert_params * (1 - cfg.top_k / cfg.num_experts)
+    return total, int(active)

@@ -1,0 +1,3 @@
+"""Serving runtime: speculative engine, cache utilities, scheduler."""
+
+from .spec_engine import SpecEngine, StreamState  # noqa: F401

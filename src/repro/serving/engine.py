@@ -1,0 +1,74 @@
+"""Single-model serving engine (non-speculative baseline).
+
+Used for (a) the Cen-SPIN / vanilla-AR baselines of Fig. 6, (b) decode-path
+benchmarking, and (c) as the verification-only server facade when devices
+draft remotely.  The speculative engine composes two of these in
+``spec_engine.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+
+
+@dataclasses.dataclass
+class EngineState:
+    pending: jax.Array       # (B,) last committed token not yet in cache
+    pos: jax.Array           # (B,) cache fill level
+    committed: list
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, max_len: int = 512,
+                 cache_dtype=jnp.float32):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self.params = None
+        self.cache = None
+
+    def init_params(self, key):
+        self.params = self.model.init(key)
+        return self.params
+
+    def start(self, prompts: jax.Array) -> EngineState:
+        B, M = prompts.shape
+        self.cache = self.model.init_cache(B, self.max_len, self.cache_dtype)
+        _, self.cache, _ = self.model.prefill(self.params, prompts[:, :-1],
+                                              self.cache)
+        return EngineState(pending=prompts[:, -1],
+                           pos=jnp.full((B,), M - 1, jnp.int32),
+                           committed=[list(np.asarray(prompts[b]))
+                                      for b in range(B)])
+
+    def decode_step(self, state: EngineState, key, temperature: float = 1.0):
+        """One autoregressive token per stream."""
+        logits, self.cache = self.model.forward_window(
+            self.params, state.pending[:, None], self.cache, state.pos)
+        if temperature == 0:
+            nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(
+                key, logits[:, 0].astype(jnp.float32) / temperature,
+                axis=-1).astype(jnp.int32)
+        out = np.asarray(nxt)
+        for b in range(len(out)):
+            state.committed[b].append(int(out[b]))
+        return EngineState(pending=nxt, pos=state.pos + 1,
+                           committed=state.committed), nxt
+
+    def generate(self, prompts: jax.Array, n_tokens: int, key,
+                 temperature: float = 1.0) -> list:
+        state = self.start(prompts)
+        keys = jax.random.split(key, n_tokens)
+        for t in range(n_tokens):
+            state, _ = self.decode_step(state, keys[t], temperature)
+        return state.committed

@@ -1,0 +1,59 @@
+"""Cache utilities for the serving runtime.
+
+Models own their cache layout (``init_cache`` / ``CACHE_BATCH_AXES``); this
+module adds the serving-level operations:
+
+  * snapshot selection — SSM-state rollback after speculative verification
+  * byte accounting — admission control / placement decisions
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def select_snapshots(snapshots, idx: jax.Array, batch_axes: dict):
+    """Per-row snapshot selection.
+
+    snapshots: pytree whose leaves have a leading step axis T (stacked caches
+    from ``forward_window(..., return_snapshots=True)``).
+    idx: (B,) step index to keep for each row (clamped to [0, T-1]).
+    batch_axes: leaf-key -> batch axis in the UNSTACKED cache layout.
+
+    Returns a cache pytree (no leading T) where row b carries the state after
+    step idx[b].
+    """
+    T = jax.tree.leaves(snapshots)[0].shape[0]
+    idx = jnp.clip(idx, 0, T - 1)
+
+    def _select(key, leaf):
+        ba = batch_axes[key]
+        # leaf: (T, ..., B at ba+1, ...); vmap over the batch axis and pick
+        # the per-row step.
+        return jax.vmap(lambda s, i: s[i], in_axes=(ba + 1, 0), out_axes=ba)(
+            leaf, idx)
+
+    return {k: _select(k, v) for k, v in snapshots.items()}
+
+
+def merge_snapshot_into_cache(cache, selected, keys=("ssm", "conv")):
+    """Overwrite the recurrent-state leaves of ``cache`` with rolled-back
+    versions, keeping attention KV leaves (mask-managed) as-is."""
+    out = dict(cache)
+    for k in keys:
+        if k in selected:
+            out[k] = selected[k]
+    return out
+
+
+def cache_bytes(cache) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(cache))
+
+
+def needs_state_rollback(cfg) -> bool:
+    """Whether the family carries recurrent state that speculative rejection
+    must roll back (attention KV is rollback-free under position masking)."""
+    return cfg.family in ("ssm", "hybrid")

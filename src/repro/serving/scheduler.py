@@ -1,0 +1,92 @@
+"""Round-granular request scheduler for the Multi-SPIN cell.
+
+The paper's protocol serves K devices per round; real cells have churn:
+requests finish (EOS / max_tokens) and new devices join.  The scheduler keeps
+the verification batch full (continuous batching at ROUND granularity — the
+natural analogue of token-level continuous batching under synchronized
+batched verification), tracks per-request accounting, and exposes the
+device-profile view the controller plans against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    task: str = ""
+    alpha: float = 0.8            # task-profile acceptance estimate
+    T_S: float = 0.03             # device compute speed
+    generated: int = 0
+    rounds: int = 0
+    done: bool = False
+    submit_time: float = 0.0
+    finish_time: float = 0.0
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    completed: int = 0
+    total_tokens: int = 0
+    total_rounds: int = 0
+    wall_time: float = 0.0
+
+    @property
+    def goodput(self) -> float:
+        return self.total_tokens / self.wall_time if self.wall_time else 0.0
+
+
+class RoundScheduler:
+    """Admission + retirement around the Multi-SPIN round loop."""
+
+    def __init__(self, max_batch: int):
+        self.max_batch = max_batch
+        self.queue: deque[Request] = deque()
+        self.active: list[Request] = []
+        self.stats = SchedulerStats()
+        self.clock = 0.0
+
+    def submit(self, req: Request):
+        req.submit_time = self.clock
+        self.queue.append(req)
+
+    def admit(self) -> list[Request]:
+        """Fill free batch slots from the queue; returns the active set."""
+        while len(self.active) < self.max_batch and self.queue:
+            self.active.append(self.queue.popleft())
+        return self.active
+
+    def device_profiles(self):
+        """(alphas, T_S) of the active set for the controller."""
+        return (np.array([r.alpha for r in self.active]),
+                np.array([r.T_S for r in self.active]))
+
+    def complete_round(self, accepted: np.ndarray, round_time: float):
+        """Account one round; retire requests that reached their budget."""
+        self.clock += round_time
+        self.stats.total_rounds += 1
+        self.stats.wall_time += round_time
+        still = []
+        for req, n in zip(self.active, accepted):
+            produced = int(min(n, req.max_new_tokens - req.generated))
+            req.generated += produced
+            req.rounds += 1
+            self.stats.total_tokens += produced
+            if req.generated >= req.max_new_tokens:
+                req.done = True
+                req.finish_time = self.clock
+                self.stats.completed += 1
+            else:
+                still.append(req)
+        self.active = still
+
+    @property
+    def idle(self) -> bool:
+        return not self.active and not self.queue

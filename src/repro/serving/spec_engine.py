@@ -1,0 +1,149 @@
+"""Speculative decoding engine: SLM drafting + LLM batched verification on
+real model weights (the compute core of Multi-SPIN, paper Fig. 1).
+
+One ``SpecEngine`` drives B concurrent streams (one per edge device).  Each
+round (paper Fig. 2):
+
+  2. drafting       — ``generate_drafts`` on the draft model (per-stream
+                       heterogeneous lengths, zero-padded to the window)
+  4. verification   — ONE ``forward_window`` of the target model over
+                       [pending, d_1 .. d_L] followed by exact accept/reject
+                       (``verify_drafts``)
+  5. state update   — pointer arithmetic for attention caches; snapshot
+                       rollback for SSM state
+
+The engine is deliberately network-free: the protocol layer wraps it with the
+channel/latency model to produce goodput numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.drafting import generate_drafts
+from repro.core.verification import VerifyResult, verify_drafts
+from repro.models import build_model
+
+from .kv_cache import merge_snapshot_into_cache, needs_state_rollback, select_snapshots
+
+
+@dataclasses.dataclass
+class StreamState:
+    """Per-batch serving state (B streams)."""
+
+    pending: jax.Array        # (B,) last committed token, not yet in caches
+    target_pos: jax.Array     # (B,) target-cache fill level
+    draft_pos: jax.Array      # (B,) draft-cache fill level
+    committed: list           # python-side committed token lists (B)
+
+
+class SpecEngine:
+    def __init__(self, target_cfg: ModelConfig, draft_cfg: ModelConfig,
+                 max_len: int = 512, cache_dtype=jnp.float32):
+        assert target_cfg.vocab_size == draft_cfg.vocab_size, \
+            "SLM/LLM pair must share a vocabulary"
+        self.target_cfg = target_cfg
+        self.draft_cfg = draft_cfg
+        self.target = build_model(target_cfg)
+        self.draft = build_model(draft_cfg)
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self.t_params = None
+        self.d_params = None
+
+    # ------------------------------------------------------------------
+
+    def init_params(self, key):
+        kt, kd = jax.random.split(key)
+        self.t_params = self.target.init(kt)
+        self.d_params = self.draft.init(kd)
+        return self.t_params, self.d_params
+
+    def start(self, prompts: jax.Array) -> StreamState:
+        """Prefill both models on the prompts (B, M).  The last prompt token
+        becomes the pending token (its logits seed round 1)."""
+        B, M = prompts.shape
+        self.t_cache = self.target.init_cache(B, self.max_len, self.cache_dtype)
+        self.d_cache = self.draft.init_cache(B, self.max_len, self.cache_dtype)
+        _, self.t_cache, _ = self.target.prefill(self.t_params, prompts[:, :-1],
+                                                 self.t_cache)
+        _, self.d_cache, _ = self.draft.prefill(self.d_params, prompts[:, :-1],
+                                                self.d_cache)
+        return StreamState(
+            pending=prompts[:, -1],
+            target_pos=jnp.full((B,), M - 1, jnp.int32),
+            draft_pos=jnp.full((B,), M - 1, jnp.int32),
+            committed=[list(np.asarray(prompts[b])) for b in range(B)],
+        )
+
+    # ------------------------------------------------------------------
+
+    def spin_round(self, state: StreamState, lengths: np.ndarray,
+                   key: jax.Array, vhat: int = 64):
+        """One Multi-SPIN round with per-stream draft lengths (zero-padded to
+        the max).  Returns (state, VerifyResult, draft_result)."""
+        B = state.pending.shape[0]
+        lengths = np.asarray(lengths, dtype=np.int64)
+        L = int(lengths.max())
+        k_draft, k_verify = jax.random.split(key)
+
+        # --- step 2: distributed drafting (SLM) ---
+        d_snap = self.d_cache if needs_state_rollback(self.draft_cfg) else None
+        draft_res = generate_drafts(self.draft, self.d_params, self.d_cache,
+                                    state.pending, state.draft_pos, L,
+                                    k_draft, vhat=vhat)
+        self.d_cache = draft_res.cache
+
+        # --- step 4: batched verification (LLM) ---
+        window = jnp.concatenate([state.pending[:, None], draft_res.tokens],
+                                 axis=1)                       # (B, L+1)
+        if needs_state_rollback(self.target_cfg):
+            logits, t_cache, snaps = self.target.forward_window(
+                self.t_params, window, self.t_cache, state.target_pos,
+                return_snapshots=True)
+        else:
+            logits, t_cache = self.target.forward_window(
+                self.t_params, window, self.t_cache, state.target_pos)
+            snaps = None
+
+        draft_len = jnp.asarray(lengths, jnp.int32)
+        res = verify_drafts(k_verify, draft_res.tokens, draft_res.probs,
+                            logits, q_idx=draft_res.q_idx, q_val=draft_res.q_val,
+                            draft_len=draft_len)
+
+        # --- step 5: commit + rollback ---
+        # target cache: row b processed [pending, d_1..d_n]; snapshot index n
+        # (0-based: snapshot t is the state after feeding window[:, :t+1]).
+        if snaps is not None:
+            sel = select_snapshots(snaps, res.accept_counts,
+                                   self.target.CACHE_BATCH_AXES)
+            t_cache = merge_snapshot_into_cache(t_cache, sel)
+        self.t_cache = t_cache
+
+        # draft cache: processed [pending, d_1..d_{L-1}]; valid prefix for row
+        # b is pending + n accepted drafts. SSM draft state rolls back via
+        # re-prefill from scratch in this reference engine only when needed.
+        if needs_state_rollback(self.draft_cfg):
+            raise NotImplementedError(
+                "SSM draft models need snapshot drafting; assigned pairs use "
+                "attention SLMs (DESIGN.md §Arch-applicability)")
+
+        new_target_pos = state.target_pos + 1 + res.accept_counts
+        new_draft_pos = state.draft_pos + 1 + res.accept_counts
+        new_pending = jnp.take_along_axis(
+            res.output_tokens, res.accept_counts[:, None], axis=1)[:, 0]
+
+        out_np = np.asarray(res.output_tokens)
+        n_np = np.asarray(res.accept_counts)
+        for b in range(B):
+            state.committed[b].extend(out_np[b, :n_np[b] + 1].tolist())
+
+        new_state = StreamState(pending=new_pending, target_pos=new_target_pos,
+                                draft_pos=new_draft_pos,
+                                committed=state.committed)
+        return new_state, res, draft_res

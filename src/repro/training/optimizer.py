@@ -1,0 +1,91 @@
+"""AdamW with cosine schedule, global-norm clipping, decoupled weight decay.
+
+Written against plain pytrees (no optax dependency).  Optimizer-state dtype
+is configurable: fp32 moments by default; bf16 moments for memory-dominated
+giants (arctic-480b training dry-run uses bf16, DESIGN.md §5).  All updates
+are elementwise, so any pjit sharding of the parameters transfers one-to-one
+to the optimizer state (ZeRO-style when params are FSDP-sharded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    state_dtype: str = "float32"
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay -> floor at min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = cfg.learning_rate * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.learning_rate * cos)
+
+
+def init_optimizer(cfg: OptimizerConfig, params: Params) -> Params:
+    dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.state_dtype]
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply_gradients(cfg: OptimizerConfig, params: Params, grads: Params,
+                    state: Params):
+    """One AdamW step.  Returns (params, state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        update = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * update
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "v": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,19 @@
+"""Shared test configuration.
+
+jax holds every compiled executable for the life of the process; across 200+
+tests (40 arch-smoke model variants, kernel interpret runs, engine loops) the
+LLVM JIT footprint grows to several GB and can abort the suite on smaller
+hosts.  Dropping the compilation caches between test modules caps the peak.
+"""
+
+import gc
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()
+    gc.collect()

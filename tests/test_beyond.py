@@ -1,0 +1,142 @@
+"""Beyond-paper extensions: packed verification + pipelined rounds."""
+
+import numpy as np
+import pytest
+
+from repro.core.beyond import (
+    TokenBudgetVerifier,
+    pipelined_goodput,
+    solve_heterogeneous_packed,
+    solve_heterogeneous_padded_tokenbudget,
+)
+from repro.core.channel import ChannelConfig, ChannelState
+from repro.core.draft_control import solve_heterogeneous
+
+
+def _system(K=12, seed=0, B=10e6):
+    rng = np.random.default_rng(seed)
+    alphas = rng.choice([0.71, 0.74, 0.86, 0.93], K)
+    T_S = rng.uniform(0.85, 1.15, K) * 0.009
+    cfg = ChannelConfig(total_bandwidth_hz=B)
+    ch = ChannelState.sample(cfg, K, rng)
+    return alphas, T_S, ch.rates, cfg.q_tok_bits, B
+
+
+def test_verifier_calibration_consistency():
+    """At L == L_ref, the token-budget padded cost equals the affine model."""
+    v = TokenBudgetVerifier.from_affine(t_fix=0.035, t_lin=0.0177, L_ref=8)
+    K = 20
+    affine = 0.035 + K * 0.0177
+    assert v.padded(K, 8) == pytest.approx(affine, rel=1e-9)
+    # packed with uniform lengths == padded
+    assert v.packed(np.full(K, 8)) == pytest.approx(affine, rel=1e-9)
+
+
+def test_packed_never_worse_than_padded():
+    v = TokenBudgetVerifier.from_affine(0.035, 0.0177)
+    for seed in range(4):
+        alphas, T_S, r, Q, B = _system(seed=seed, B=2e6)
+        pad = solve_heterogeneous_padded_tokenbudget(alphas, T_S, r, Q, B, v)
+        pk = solve_heterogeneous_packed(alphas, T_S, r, Q, B, v)
+        assert pk.goodput >= pad.goodput * (1 - 1e-9)
+
+
+def test_packed_saves_with_heterogeneous_lengths():
+    """When optimal lengths are heterogeneous, packing must strictly win."""
+    v = TokenBudgetVerifier.from_affine(0.035, 0.0177, kv_fraction=0.3)
+    alphas = np.array([0.6, 0.6, 0.95, 0.95])
+    T_S = np.full(4, 0.005)
+    rng = np.random.default_rng(0)
+    cfg = ChannelConfig(total_bandwidth_hz=1e6)
+    ch = ChannelState.sample(cfg, 4, rng)
+    pad = solve_heterogeneous_padded_tokenbudget(
+        alphas, T_S, ch.rates, cfg.q_tok_bits, 1e6, v, n_phi=60, n_lam=60)
+    pk = solve_heterogeneous_packed(
+        alphas, T_S, ch.rates, cfg.q_tok_bits, 1e6, v, n_phi=60, n_lam=60)
+    assert len(set(pk.lengths.tolist())) > 1, pk.lengths  # heterogeneous
+    assert pk.goodput > pad.goodput
+
+
+def test_pipelined_beats_synchronous():
+    """Overlap must win whenever T_ver is comparable to T_ma."""
+    alphas, T_S, r, Q, B = _system(K=16, seed=1)
+    t_ver_of_K = lambda k: 0.035 + k * 0.0177  # noqa: E731
+    sync = solve_heterogeneous(alphas, T_S, r, Q, B, t_ver_of_K(16), L_max=25)
+    pipe = pipelined_goodput(alphas, T_S, r, Q, B, t_ver_of_K, L_max=25)
+    assert pipe["goodput"] > sync.goodput
+    assert len(pipe["halves"]) == 2
+
+
+def test_pipelined_period_formula():
+    alphas, T_S, r, Q, B = _system(K=8, seed=2)
+    t_ver_of_K = lambda k: 0.2  # noqa: E731  (verification-dominated)
+    pipe = pipelined_goodput(alphas, T_S, r, Q, B, t_ver_of_K, L_max=25)
+    # with t_ver >> t_ma the period approaches 2 * t_ver (server saturated)
+    assert pipe["period"] >= 0.4 - 1e-9
+
+
+def test_protocol_pipelined_and_packed_schemes():
+    """Protocol-level integration: pipelined schedule and the hete-packed
+    controller must both beat the synchronous paper baseline on realized
+    (simulated) goodput."""
+    from repro.core.channel import ChannelConfig
+    from repro.core.controller import MultiSpinController, VerificationLatencyModel
+    from repro.core.protocol import DeviceProfile, MultiSpinProtocol
+
+    rng = np.random.default_rng(0)
+    K = 12
+    devices = [DeviceProfile(T_S=0.009 * f, alpha=a)
+               for f, a in zip(rng.uniform(0.85, 1.15, K),
+                               rng.choice([0.71, 0.74, 0.86, 0.93], K))]
+    cfg = ChannelConfig()
+
+    def proto(scheme):
+        ctrl = MultiSpinController(
+            scheme=scheme, q_tok_bits=cfg.q_tok_bits,
+            bandwidth_hz=cfg.total_bandwidth_hz,
+            t_ver_model=VerificationLatencyModel(0.035, 0.0177), L_max=25)
+        return MultiSpinProtocol(ctrl, cfg, devices, np.random.default_rng(1))
+
+    sync = proto("hete").run(40)["goodput"]
+    packed = proto("hete-packed").run(40)["goodput"]
+    piped = proto("hete").run_pipelined(80)["goodput"]
+    assert packed >= sync * 0.95          # never materially worse
+    assert piped > sync                   # overlap wins
+
+
+def test_multidraft_expected_tokens():
+    """E[max of J truncated geometrics]: J=1 == eq. 12; Monte-Carlo check."""
+    from repro.core.beyond import expected_accepted_multidraft
+    from repro.core.goodput import expected_accepted_tokens
+
+    for alpha in (0.5, 0.8, 0.95):
+        for L in (1, 4, 12):
+            np.testing.assert_allclose(
+                float(expected_accepted_multidraft(np.float64(alpha), L, 1)),
+                float(expected_accepted_tokens(alpha, L)), rtol=1e-12)
+    # Monte Carlo for J=3
+    rng = np.random.default_rng(0)
+    alpha, L, J, n = 0.8, 6, 3, 60000
+    acc = rng.random((n, J, L)) < alpha
+    n_j = np.cumprod(acc, axis=2).sum(axis=2)
+    emp = np.mean(n_j.max(axis=1) + 1)
+    theory = float(expected_accepted_multidraft(np.float64(alpha), L, J))
+    assert abs(emp - theory) < 0.02 * theory
+
+
+def test_multidraft_optimizer_beats_single_draft():
+    """With cheap verification and a rich uplink, J > 1 must win; the
+    optimizer never returns less than the J=1 optimum."""
+    from repro.core.beyond import TokenBudgetVerifier, solve_uniform_multidraft
+
+    K = 8
+    T_S = np.full(K, 0.004)
+    r = np.full(K, 6.0)
+    v = TokenBudgetVerifier.from_affine(t_fix=0.3, t_lin=0.002)
+    out = solve_uniform_multidraft(0.6, T_S, r, 31744.0, 40e6, v, K)
+    assert out["best"]["goodput"] >= out["single_draft"]["goodput"] - 1e-9
+    assert out["best"]["J"] > 1, out
+    assert out["gain"] > 0.02
+    # and in a bandwidth-starved cell J = 1 should remain optimal
+    out2 = solve_uniform_multidraft(0.6, T_S, r, 31744.0, 0.3e6, v, K)
+    assert out2["best"]["J"] == 1, out2["best"]

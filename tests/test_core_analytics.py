@@ -1,0 +1,315 @@
+"""Unit + property tests for the paper's analytic layer (Sec. II, IV, V)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bandwidth import solve_equalized_phi, solve_equalized_theta
+from repro.core.channel import ChannelConfig, ChannelState
+from repro.core.draft_control import (
+    heterogeneous_lengths,
+    optimal_uniform_length,
+    solve_fixed,
+    solve_heterogeneous,
+    solve_homogeneous_exhaustive,
+    solve_uniform_bandwidth,
+)
+from repro.core.goodput import (
+    expected_accepted_tokens,
+    goodput_homogeneous,
+    multi_access_latency,
+)
+from repro.core.lambertw import lambert_w0, lambert_wm1
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# Lambert W
+# ---------------------------------------------------------------------------
+
+def test_lambertw_identity_w0():
+    xs = np.concatenate([np.linspace(-np.exp(-1) + 1e-9, -1e-6, 500),
+                         np.geomspace(1e-9, 1e9, 500)])
+    w = lambert_w0(xs)
+    np.testing.assert_allclose(w * np.exp(w), xs, rtol=1e-9, atol=1e-12)
+
+
+def test_lambertw_identity_wm1():
+    xs = -np.geomspace(1e-280, np.exp(-1) - 1e-9, 500)
+    w = lambert_wm1(xs)
+    np.testing.assert_allclose(w * np.exp(w), xs, rtol=1e-8)
+    assert np.all(w <= -1.0 + 1e-9)
+
+
+def test_lambertw_vs_scipy():
+    scipy_special = pytest.importorskip("scipy.special")
+    xs = np.linspace(-np.exp(-1) + 1e-9, 5.0, 1000)
+    np.testing.assert_allclose(lambert_w0(xs), scipy_special.lambertw(xs, 0).real,
+                               rtol=1e-9)
+    # stay 1e-6 off the branch point: W has a sqrt singularity there, so the
+    # achievable relative accuracy at distance d is O(sqrt(d)).
+    xm = -np.geomspace(1e-200, np.exp(-1) - 1e-6, 1000)
+    np.testing.assert_allclose(lambert_wm1(xm), scipy_special.lambertw(xm, -1).real,
+                               rtol=1e-7)
+
+
+def test_lambertw_domain_nan():
+    assert np.isnan(lambert_w0(np.asarray(-1.0)))
+    assert np.isnan(lambert_wm1(np.asarray(0.1)))
+    assert np.isnan(lambert_wm1(np.asarray(-1.0)))
+
+
+# ---------------------------------------------------------------------------
+# Goodput model (eq. 12-17)
+# ---------------------------------------------------------------------------
+
+@given(st.floats(0.01, 0.999), st.integers(1, 100))
+@settings(max_examples=60, deadline=None)
+def test_expected_accepted_matches_pmf_sum(alpha, L):
+    """E[N|L] from eq. 12 must equal the mean of the PMF in eq. 11."""
+    ells = np.arange(1, L + 1)
+    pmf = alpha ** (ells - 1) * (1 - alpha)
+    mean = np.sum(ells * pmf) + (L + 1) * alpha ** L
+    np.testing.assert_allclose(expected_accepted_tokens(alpha, L), mean, rtol=1e-9)
+
+
+def test_expected_accepted_limits():
+    np.testing.assert_allclose(expected_accepted_tokens(1.0 - 1e-15, 7), 8.0, rtol=1e-6)
+    np.testing.assert_allclose(expected_accepted_tokens(1e-12, 7), 1.0, rtol=1e-6)
+
+
+def test_multi_access_latency_straggler():
+    # eq. 25: max over devices
+    L = np.array([2, 10])
+    T_S = np.array([0.01, 0.02])
+    B = np.array([1e6, 1e6])
+    r = np.array([5.0, 5.0])
+    t = multi_access_latency(L, T_S, 34816.0, B, r)
+    per_tok = T_S + 34816.0 / (B * r)
+    assert t == pytest.approx(10 * per_tok[1])
+
+
+# ---------------------------------------------------------------------------
+# Lemma 1 (bandwidth allocation, uniform regime)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 24), st.floats(1e6, 50e6))
+@settings(max_examples=40, deadline=None)
+def test_lemma1_equalizes_and_exhausts(K, B):
+    rng = np.random.default_rng(K)
+    T_S = rng.uniform(0.01, 0.05, K)
+    r = rng.uniform(3.0, 8.0, K)
+    Q = 34816.0
+    theta, B_star = solve_equalized_theta(T_S, r, Q, B)
+    assert np.all(B_star > 0)
+    np.testing.assert_allclose(np.sum(B_star), B, rtol=1e-9)
+    lat = T_S + Q / (B_star * r)
+    np.testing.assert_allclose(lat, theta, rtol=1e-9)
+    assert theta > np.max(T_S)
+
+
+def test_lemma1_theta_decreases_with_bandwidth():
+    T_S = np.array([0.02, 0.03, 0.025])
+    r = np.array([5.0, 4.0, 6.0])
+    thetas = [float(solve_equalized_theta(T_S, r, 34816.0, B)[0])
+              for B in [5e6, 10e6, 20e6, 40e6]]
+    assert all(a > b for a, b in zip(thetas, thetas[1:]))
+
+
+def test_lemma1_weak_devices_get_more_bandwidth():
+    """Paper insight: uniform regime compensates weaker C2 capabilities."""
+    T_S = np.array([0.02, 0.04])   # device 1 slower compute
+    r = np.array([5.0, 5.0])
+    _, B_star = solve_equalized_theta(T_S, r, 34816.0, 10e6)
+    assert B_star[1] > B_star[0]
+    # Weaker channel also compensated
+    T_S2 = np.array([0.02, 0.02])
+    r2 = np.array([6.0, 3.0])
+    _, B2 = solve_equalized_theta(T_S2, r2, 34816.0, 10e6)
+    assert B2[1] > B2[0]
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 (optimal uniform draft length)
+# ---------------------------------------------------------------------------
+
+@given(st.floats(0.05, 0.98), st.floats(0.001, 0.2), st.floats(0.001, 0.5))
+@settings(max_examples=100, deadline=None)
+def test_theorem1_matches_bruteforce(alpha, theta, T_ver):
+    L_star, L_tilde = optimal_uniform_length(alpha, theta, T_ver)
+    Ls = np.arange(1, 3000)
+    taus = goodput_homogeneous(alpha, Ls, theta, T_ver, K=1)
+    brute = Ls[int(np.argmax(taus))]
+    assert int(L_star) == brute
+
+
+def test_theorem1_boundary_case():
+    # T_ver/theta below the threshold => L* = 1
+    alpha = 0.5
+    thresh = (1 - alpha) / (alpha * abs(np.log(alpha)))
+    L_star, _ = optimal_uniform_length(alpha, theta=1.0, T_ver=0.5 * thresh)
+    assert int(L_star) == 1
+
+
+def test_theorem1_monotonicity():
+    """Remark 1: L* grows with T_ver and alpha, shrinks with theta."""
+    base = dict(alpha=0.8, theta=0.02, T_ver=0.1)
+    L0 = float(optimal_uniform_length(**base)[1])
+    assert float(optimal_uniform_length(0.8, 0.02, 0.4)[1]) > L0
+    assert float(optimal_uniform_length(0.95, 0.02, 0.1)[1]) > L0
+    assert float(optimal_uniform_length(0.8, 0.08, 0.1)[1]) < L0
+
+
+def test_theorem1_alpha_to_one_scaling():
+    """Remark 1: L~* + 1 ~ sqrt(2(t-1)/(-ln alpha)) as alpha -> 1."""
+    theta, T_ver = 0.02, 0.1
+    t = T_ver / theta
+    for alpha in [0.999, 0.9999]:
+        L_t = float(optimal_uniform_length(alpha, theta, T_ver)[1])
+        pred = np.sqrt(2 * (t - 1) / (-np.log(alpha)))
+        assert abs((L_t + 1) / pred - 1) < 0.15
+
+
+# ---------------------------------------------------------------------------
+# Lemma 3 (bandwidth under heterogeneous lengths)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 16))
+@settings(max_examples=40, deadline=None)
+def test_lemma3_equalizes(K):
+    rng = np.random.default_rng(K + 100)
+    T_S = rng.uniform(0.01, 0.05, K)
+    r = rng.uniform(3.0, 8.0, K)
+    L = rng.integers(1, 20, K).astype(float)
+    Q, B = 34816.0, 10e6
+    phi, B_of_L = solve_equalized_phi(L, T_S, r, Q, B)
+    np.testing.assert_allclose(np.sum(B_of_L), B, rtol=1e-9)
+    lat = L * (T_S + Q / (B_of_L * r))
+    np.testing.assert_allclose(lat, phi, rtol=1e-9)
+    assert phi > np.max(L * T_S)
+
+
+def test_lemma3_phi_increases_with_length():
+    T_S = np.array([0.02, 0.03])
+    r = np.array([5.0, 4.0])
+    L1 = np.array([5.0, 5.0])
+    L2 = np.array([5.0, 9.0])
+    phi1, B1 = solve_equalized_phi(L1, T_S, r, 34816.0, 10e6)
+    phi2, B2 = solve_equalized_phi(L2, T_S, r, 34816.0, 10e6)
+    assert phi2 > phi1
+    assert B2[1] > B1[1]  # longer draft needs more bandwidth
+
+
+# ---------------------------------------------------------------------------
+# Proposition 1 (KKT stationarity of eq. 33)
+# ---------------------------------------------------------------------------
+
+@given(st.floats(0.3, 0.97), st.floats(0.005, 0.05), st.floats(2.0, 8.0),
+       st.floats(0.05, 2.0), st.floats(1e-7, 1e-2))
+@settings(max_examples=100, deadline=None)
+def test_prop1_satisfies_kkt_stationarity(alpha, T_S, r, phi, lam):
+    """eq. 33 must solve: -a^(L+1) ln a/(1-a) = lam*Q*phi/(r*(phi - L*T)^2)."""
+    Q = 34816.0
+    L = float(heterogeneous_lengths(phi, lam, np.array([alpha]),
+                                    np.array([T_S]), np.array([r]), Q)[0])
+    if not np.isfinite(L) or L <= 0 or L >= phi / T_S:
+        return  # outside the interior region; nothing to check
+    lhs = -(alpha ** (L + 1)) * np.log(alpha) / (1 - alpha)
+    rhs = lam * Q * phi / (r * (phi - L * T_S) ** 2)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 and baseline orderings (Figs. 6-8 structure)
+# ---------------------------------------------------------------------------
+
+def _random_system(K, seed=0):
+    rng = np.random.default_rng(seed)
+    alphas = rng.choice([0.71, 0.74, 0.74, 0.86], K)
+    T_S = rng.uniform(0.85, 1.15, K) * 0.03
+    r = rng.uniform(4.0, 7.0, K)
+    return alphas, T_S, r
+
+
+@pytest.mark.parametrize("K,seed", [(4, 0), (8, 1), (20, 2)])
+def test_hete_beats_homo_beats_fixed(K, seed):
+    alphas, T_S, r = _random_system(K, seed)
+    Q, B, T_ver = 34816.0, 10e6, 0.03 + K * 0.002
+    hete = solve_heterogeneous(alphas, T_S, r, Q, B, T_ver, L_max=25)
+    homo = solve_homogeneous_exhaustive(alphas, T_S, r, Q, B, T_ver, L_max=25)
+    fixed = solve_fixed(alphas, T_S, r, Q, B, T_ver)
+    assert hete.goodput >= homo.goodput * (1 - 1e-6)
+    assert homo.goodput >= fixed.goodput * (1 - 1e-6)
+
+
+def test_unibw_beats_fixed():
+    alphas, T_S, r = _random_system(12, 3)
+    Q, B, T_ver = 34816.0, 10e6, 0.054
+    uni = solve_uniform_bandwidth(alphas, T_S, r, Q, B, T_ver, L_max=25)
+    fixed = solve_fixed(alphas, T_S, r, Q, B, T_ver)
+    assert uni.goodput >= fixed.goodput * (1 - 1e-6)
+
+
+def test_algorithm1_near_bruteforce_k2():
+    """For K=2 the MINLP is brute-forceable: Algorithm 1 must come close."""
+    alphas = np.array([0.74, 0.93])
+    T_S = np.array([0.03, 0.025])
+    r = np.array([5.0, 6.5])
+    Q, B, T_ver, L_max = 34816.0, 4e6, 0.06, 25
+    best = -np.inf
+    for l1 in range(1, L_max + 1):
+        for l2 in range(1, L_max + 1):
+            L = np.array([l1, l2], dtype=float)
+            phi, _ = solve_equalized_phi(L, T_S, r, Q, B)
+            tau = float(np.sum(expected_accepted_tokens(alphas, L)) / (phi + T_ver))
+            best = max(best, tau)
+    sol = solve_heterogeneous(alphas, T_S, r, Q, B, T_ver, L_max=L_max,
+                              n_phi=60, n_lam=60)
+    assert sol.goodput >= 0.97 * best
+
+
+def test_remark2_bandwidth_rewards_high_alpha():
+    """Heterogeneous regime: higher acceptance rate => more bandwidth.
+
+    Exhibited in the communication-dominated regime (small B): with identical
+    compute and channels, the high-alpha device must get longer drafts AND a
+    larger bandwidth share (verified against 2-device brute force separately).
+    """
+    alphas = np.array([0.6, 0.95])
+    T_S = np.array([0.005, 0.005])   # identical compute
+    r = np.array([5.0, 5.0])         # identical channel
+    sol = solve_heterogeneous(alphas, T_S, r, 34816.0, 1e6, 0.06, L_max=25,
+                              n_phi=60, n_lam=60)
+    assert sol.lengths[1] > sol.lengths[0]
+    assert sol.bandwidth[1] > sol.bandwidth[0]
+
+
+# ---------------------------------------------------------------------------
+# Channel model
+# ---------------------------------------------------------------------------
+
+def test_channel_q_tok_default():
+    cfg = ChannelConfig()
+    # |V^hat| (Q_B + ceil(log2 32000)) = 1024 * (16 + 15) = 31744
+    assert cfg.q_tok_bits == 1024 * (16 + 15)
+
+
+def test_channel_snr_range():
+    cfg = ChannelConfig()
+    rng = np.random.default_rng(0)
+    st_ = ChannelState.sample(cfg, 1000, rng)
+    snr_db = 10 * np.log10(cfg.power_psd * st_.avg_gains / cfg.noise_psd)
+    assert snr_db.min() >= cfg.snr_lo_db - 1e-6
+    assert snr_db.max() <= cfg.snr_hi_db + 1e-6
+    assert np.all(st_.rates > 0)
+
+
+def test_channel_rate_independent_of_bandwidth_split():
+    """Constant-PSD transmission: spectrum efficiency is bandwidth-free."""
+    cfg = ChannelConfig()
+    rng = np.random.default_rng(1)
+    s = ChannelState.sample(cfg, 4, rng)
+    R1 = s.uplink_rate_bps(np.full(4, cfg.total_bandwidth_hz / 4))
+    R2 = s.uplink_rate_bps(np.full(4, cfg.total_bandwidth_hz / 8))
+    np.testing.assert_allclose(R1 / R2, 2.0)

@@ -1,0 +1,247 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles.
+
+Per assignment: for each kernel, sweep shapes/dtypes and assert_allclose
+against the ref.py oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gather_softmax_prob import gather_softmax_prob_pallas
+from repro.kernels.residual_sample import residual_sample_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Sq,Skv,H,KV,D", [
+    (1, 128, 128, 4, 4, 64),        # MHA, single tile
+    (2, 256, 256, 4, 2, 64),        # GQA, multi-tile
+    (1, 96, 96, 4, 1, 64),          # MQA, padded seq (96 < 128)
+    (1, 128, 384, 2, 2, 128),       # cross window (kv longer: chunked prefill)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, Sq, Skv, H, KV, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, KV, D), dtype)
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_non_causal():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 160, 2, 64))
+    k = jax.random.normal(ks[1], (1, 160, 2, 64))
+    v = jax.random.normal(ks[2], (1, 160, 2, 64))
+    got = flash_attention_pallas(q, k, v, causal=False, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,D,bs", [
+    (2, 512, 4, 4, 64, 128),
+    (3, 300, 8, 2, 64, 128),        # ragged padding, GQA
+    (1, 2048, 4, 1, 128, 512),      # MQA long cache
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(B, S, H, KV, D, bs, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
+    got = decode_attention_pallas(q, k, v, lengths, bs=bs, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# gather softmax prob
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,V,bv", [
+    (8, 4096, 2048),
+    (5, 50280, 8192),      # vocab not a tile multiple (mamba2 vocab)
+    (16, 257, 512),        # tiny vocab, heavy padding
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_softmax_prob_matches_ref(N, V, bv, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    logits = (jax.random.normal(ks[0], (N, V)) * 4.0).astype(dtype)
+    ids = jax.random.randint(ks[1], (N,), 0, V)
+    got = gather_softmax_prob_pallas(logits, ids, bv=bv, interpret=True)
+    want = ref.gather_softmax_prob_ref(logits, ids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-3 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# residual sample
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,V,bv", [(16, 4096, 1024), (7, 1000, 256),
+                                    (4, 50280, 8192)])
+def test_residual_sample_matches_ref(N, V, bv):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    p = jax.random.dirichlet(ks[0], jnp.ones((V,)) * 0.5, (N,))
+    q = jax.random.dirichlet(ks[1], jnp.ones((V,)) * 0.5, (N,))
+    u = jax.random.uniform(ks[2], (N,))
+    got = residual_sample_pallas(p, q, u, bv=bv, interpret=True)
+    want = ref.residual_sample_ref(p, q, u)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_residual_sample_degenerate_rows():
+    """p == q rows must fall back to argmax(p) (both impls)."""
+    V = 512
+    p = jax.random.dirichlet(jax.random.PRNGKey(5), jnp.ones((V,)), (3,))
+    u = jnp.array([0.3, 0.6, 0.99])
+    got = residual_sample_pallas(p, p, u, bv=256, interpret=True)
+    want = ref.residual_sample_ref(p, p, u)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got), np.argmax(np.asarray(p), -1))
+
+
+def test_residual_sample_distribution():
+    """Sampled tokens must follow normalize(max(p-q,0)) (chi^2-ish check)."""
+    N, V = 4000, 16
+    kp, kq, ku = jax.random.split(jax.random.PRNGKey(6), 3)
+    p_row = jax.random.dirichlet(kp, jnp.ones((V,)))
+    q_row = jax.random.dirichlet(kq, jnp.ones((V,)))
+    p = jnp.tile(p_row, (N, 1))
+    q = jnp.tile(q_row, (N, 1))
+    u = jax.random.uniform(ku, (N,))
+    got = np.asarray(residual_sample_pallas(p, q, u, bv=16, interpret=True))
+    r = np.maximum(np.asarray(p_row) - np.asarray(q_row), 0)
+    r = r / r.sum()
+    freq = np.bincount(got, minlength=V) / N
+    sigma = np.sqrt(r * (1 - r) / N)
+    assert np.all(np.abs(freq - r) < 4 * sigma + 2e-3)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (2, 128, 4, 64, 1, 64, 32),
+    (1, 256, 8, 64, 2, 128, 64),    # grouped B/C, big state
+    (2, 64, 2, 32, 2, 16, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_ref(b, s, h, p, g, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, g, n), dtype)
+    C = jax.random.normal(ks[4], (b, s, g, n), dtype)
+    y_got, fs_got = ssd_scan_pallas(x, dt, A, B, C, chunk=chunk, interpret=True)
+    y_want, fs_want = ref.ssd_scan_ref(x, dt, A, B, C, chunk=chunk)
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_got, np.float32),
+                               np.asarray(y_want, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(fs_got), np.asarray(fs_want),
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_ssd_scan_with_initial_state():
+    b, s, h, p, g, n, chunk = 1, 64, 2, 32, 1, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(8), 6)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, g, n))
+    C = jax.random.normal(ks[4], (b, s, g, n))
+    init = jax.random.normal(ks[5], (b, h, p, n))
+    y_got, fs_got = ssd_scan_pallas(x, dt, A, B, C, chunk=chunk,
+                                    initial_state=init, interpret=True)
+    y_want, fs_want = ref.ssd_scan_ref(x, dt, A, B, C, chunk=chunk,
+                                       initial_state=init)
+    np.testing.assert_allclose(np.asarray(y_got), np.asarray(y_want),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fs_got), np.asarray(fs_want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch
+# ---------------------------------------------------------------------------
+
+def test_ops_interpret_mode_roundtrip(monkeypatch):
+    """REPRO_KERNELS=interpret routes through Pallas interpret for every op."""
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    from repro.kernels import ops
+    assert ops.kernel_mode() == "interpret"
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64))
+    k = jax.random.normal(ks[1], (1, 128, 2, 64))
+    v = jax.random.normal(ks[2], (1, 128, 2, 64))
+    got = ops.flash_attention(q, k, v)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# int8-quantized KV decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,D", [(2, 384, 4, 2, 64), (1, 1024, 8, 8, 128)])
+def test_decode_attention_q8_matches_ref(B, S, H, KV, D):
+    from repro.kernels.decode_attention import decode_attention_q8_pallas
+
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
+    kq, kscale, vq, vscale = ref.quantize_kv(k, v)
+    got = decode_attention_q8_pallas(q, kq, vq, kscale, vscale, lengths,
+                                     bs=128, interpret=True)
+    want = ref.decode_attention_quantized_ref(q, kq, vq, kscale, vscale,
+                                              lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_quantized_kv_close_to_exact():
+    """int8 KV attention must stay close to the fp path (quantization noise
+    only) — the §Perf int8-KV lever's accuracy budget."""
+    ks = jax.random.split(jax.random.PRNGKey(12), 4)
+    B, S, H, KV, D = 2, 256, 4, 4, 64
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    lengths = jnp.full((B,), S)
+    kq, kscale, vq, vscale = ref.quantize_kv(k, v)
+    exact = ref.decode_attention_ref(q, k, v, lengths)
+    quant = ref.decode_attention_quantized_ref(q, kq, vq, kscale, vscale,
+                                               lengths)
+    err = np.abs(np.asarray(exact) - np.asarray(quant))
+    assert err.max() < 0.05, err.max()

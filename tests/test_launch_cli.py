@@ -1,0 +1,36 @@
+"""End-to-end CLI smoke tests for the launch drivers (subprocess)."""
+
+import subprocess
+import sys
+
+import pytest
+
+
+def _run(args, timeout=420):
+    out = subprocess.run(
+        [sys.executable, "-m"] + args, capture_output=True, text=True,
+        cwd=".", timeout=timeout,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp"},
+    )
+    return out
+
+
+def test_train_cli_smoke():
+    out = _run(["repro.launch.train", "--arch", "qwen2.5-3b", "--smoke",
+                "--steps", "8", "--seq-len", "32", "--batch", "4"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "loss=" in out.stdout
+
+
+def test_serve_cli_smoke():
+    out = _run(["repro.launch.serve", "--arch", "deepseek-7b", "--smoke",
+                "--devices", "2", "--rounds", "2", "--max-new-tokens", "6"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "goodput=" in out.stdout
+
+
+def test_serve_cli_scheme_fixed():
+    out = _run(["repro.launch.serve", "--arch", "qwen2.5-3b", "--smoke",
+                "--devices", "2", "--rounds", "1", "--scheme", "fixed"])
+    assert out.returncode == 0, out.stderr[-2000:]

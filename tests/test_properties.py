@@ -1,0 +1,87 @@
+"""Hypothesis property tests on system-level invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bandwidth import solve_equalized_phi
+from repro.core.goodput import expected_accepted_tokens
+from repro.core.verification import verify_drafts
+from repro.training.optimizer import OptimizerConfig, apply_gradients, init_optimizer
+
+
+# ---------------------------------------------------------------------------
+# Verification invariants over random shapes/dists
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(2, 24),
+       st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_verify_output_structure(B, L, V, seed):
+    """For ANY inputs: outputs are draft-prefix + one extra token; counts in
+    range; padding zeros beyond n+1."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    p = jax.random.dirichlet(keys[0], jnp.ones((V,)), (B, L + 1))
+    q = jax.random.dirichlet(keys[1], jnp.ones((V,)), (B, L))
+    toks = jax.random.categorical(keys[2], jnp.log(q), axis=-1).astype(jnp.int32)
+    probs = jnp.take_along_axis(q, toks[..., None], -1)[..., 0]
+    res = verify_drafts(keys[3], toks, probs, jnp.log(jnp.maximum(p, 1e-30)),
+                        q_dense=q)
+    n = np.asarray(res.accept_counts)
+    out = np.asarray(res.output_tokens)
+    toks_np = np.asarray(toks)
+    assert np.all((0 <= n) & (n <= L))
+    for b in range(B):
+        # accepted prefix is copied verbatim from the draft
+        np.testing.assert_array_equal(out[b, :n[b]], toks_np[b, :n[b]])
+        # position n holds the extra token (valid vocab id)
+        assert 0 <= out[b, n[b]] < V
+        # padding after n+1 is zero
+        assert np.all(out[b, n[b] + 1:] == 0)
+
+
+@given(st.integers(2, 16), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_expected_tokens_monotone_in_length(K, seed):
+    """E[N|L] strictly increases with L for any alpha in (0,1)."""
+    rng = np.random.default_rng(seed)
+    alpha = rng.uniform(0.05, 0.99)
+    vals = [float(expected_accepted_tokens(alpha, L)) for L in range(1, K + 1)]
+    assert all(b > a for a, b in zip(vals, vals[1:]))
+    assert all(v <= 1.0 / (1.0 - alpha) + 1e-9 for v in vals)  # geometric cap
+
+
+@given(st.integers(2, 12), st.integers(0, 500))
+@settings(max_examples=30, deadline=None)
+def test_lemma3_bandwidth_positive_and_feasible(K, seed):
+    rng = np.random.default_rng(seed)
+    L = rng.integers(1, 25, K).astype(float)
+    T_S = rng.uniform(0.002, 0.05, K)
+    r = rng.uniform(1.0, 9.0, K)
+    B = rng.uniform(0.5e6, 40e6)
+    phi, Bk = solve_equalized_phi(L, T_S, r, 31744.0, B)
+    assert np.all(Bk > 0)
+    np.testing.assert_allclose(np.sum(Bk), B, rtol=1e-8)
+    assert phi > np.max(L * T_S)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer invariants
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_adamw_step_is_finite_and_bounded(seed):
+    """One AdamW step never produces NaN and respects the clip+lr bound."""
+    rng = np.random.default_rng(seed)
+    cfg = OptimizerConfig(learning_rate=1e-2, warmup_steps=0, weight_decay=0.0)
+    params = {"w": jnp.asarray(rng.normal(size=(16,)), jnp.float32)}
+    grads = {"w": jnp.asarray(rng.normal(size=(16,)) * 10 ** rng.uniform(-3, 6),
+                              jnp.float32)}
+    state = init_optimizer(cfg, params)
+    new_params, new_state, m = apply_gradients(cfg, params, grads, state)
+    assert bool(jnp.isfinite(new_params["w"]).all())
+    # |update| <= lr * (|m_hat / (sqrt(v_hat)+eps)|) ~ lr big-O bound
+    delta = np.abs(np.asarray(new_params["w"] - params["w"]))
+    assert delta.max() < cfg.learning_rate * 50

@@ -1,0 +1,99 @@
+"""Roofline analysis tests: HLO collective parsing + analytic term model."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
+from repro.models import build_model
+from repro.roofline.analysis import count_params, model_flops, parse_collectives
+from repro.roofline.analytic import MeshInfo, n_units, roofline_terms, summarize
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY %main {
+  %p0 = bf16[16,4096,3072]{2,1,0} parameter(0)
+  %ag = bf16[16,4096,3072]{2,1,0} all-gather(%p0), replica_groups={}
+  %ar = f32[256,1024]{1,0} all-reduce(%x), to_apply=%add
+  %rs = bf16[8,512]{1,0} reduce-scatter(%y), to_apply=%add
+  %cp = bf16[4,128]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    st = parse_collectives(HLO_SAMPLE)
+    assert st.counts["all-gather"] == 1
+    assert st.counts["all-reduce"] == 1
+    assert st.counts["reduce-scatter"] == 1
+    assert st.counts["collective-permute"] == 1
+    assert st.counts["all-to-all"] == 0
+    assert st.bytes_by_op["all-gather"] == 16 * 4096 * 3072 * 2
+    assert st.bytes_by_op["all-reduce"] == 256 * 1024 * 4
+    assert st.total_bytes > 0
+
+
+def test_count_params_matches_real_init():
+    """Config-derived parameter counts must equal actual init counts."""
+    for arch in ["qwen2.5-3b", "mamba2-130m", "moonshot-v1-16b-a3b"]:
+        cfg = get_config(arch).smoke()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        total, active = count_params(cfg)
+        assert total == model.num_params(params)
+        assert 0 < active <= total
+
+
+def test_moe_active_params_smaller():
+    total, active = count_params(get_config("arctic-480b"))
+    assert active < total
+    assert total > 400e9  # it is the 480B-class config
+    t2, a2 = count_params(get_config("deepseek-7b"))
+    assert t2 == a2  # dense: all params active
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("shape_name", ["train_4k", "decode_32k"])
+def test_analytic_terms_positive_and_consistent(arch, shape_name):
+    cfg = get_config(arch).replace(param_dtype="bfloat16",
+                                   compute_dtype="bfloat16", remat=True)
+    shape = SHAPES[shape_name]
+    mesh = MeshInfo(chips=256, dp=16, mp=16)
+    tb = roofline_terms(cfg, shape, mesh)
+    assert tb.flops > 0
+    assert tb.hbm_bytes > 0
+    total, active = count_params(get_config(arch))
+    mf = model_flops(cfg, shape, total, active)
+    s = summarize(tb, mf, 256)
+    assert s["bottleneck"] in ("compute", "memory", "collective")
+    assert 0 < s["peak_fraction"] <= 1.5, s
+    # useful-flops ratio: accounting flops >= model flops per chip (remat,
+    # attention quadratic, routers all add overhead)
+    if shape_name == "train_4k":
+        assert s["flops_ratio"] <= 1.01, s["flops_ratio"]
+
+
+def test_train_flops_at_least_6nd():
+    """Analytic train FLOPs must be >= 6ND/chips (remat adds the extra)."""
+    cfg = get_config("deepseek-7b").replace(remat=True)
+    shape = SHAPES["train_4k"]
+    tb = roofline_terms(cfg, shape, MeshInfo(chips=256, dp=16, mp=16))
+    total, _ = count_params(cfg)
+    six_nd = 6.0 * total * shape.global_batch * shape.seq_len / 256
+    assert tb.flops >= six_nd * 0.95
+
+
+def test_flash_flag_removes_score_bytes():
+    cfg = get_config("phi4-mini-3.8b")
+    shape = SHAPES["prefill_32k"]
+    mesh = MeshInfo(chips=256, dp=16, mp=16)
+    base = roofline_terms(cfg, shape, mesh, flash=False)
+    flash = roofline_terms(cfg, shape, mesh, flash=True)
+    assert flash.hbm_bytes < base.hbm_bytes * 0.6, \
+        (flash.hbm_bytes, base.hbm_bytes)
+
+
+def test_n_units():
+    assert n_units(get_config("zamba2-2.7b")) == 9
+    assert n_units(get_config("phi4-mini-3.8b")) == 32

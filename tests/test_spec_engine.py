@@ -1,0 +1,183 @@
+"""Integration tests: the real-model speculative engine + round protocol."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.channel import ChannelConfig
+from repro.core.controller import MultiSpinController, VerificationLatencyModel
+from repro.core.protocol import DeviceProfile, MultiSpinProtocol
+from repro.models import build_model
+from repro.serving import SpecEngine
+
+
+def _engine(target_arch="qwen2.5-3b", draft_arch="qwen2.5-3b", max_len=96):
+    tcfg = get_config(target_arch).smoke()
+    dcfg = get_config(draft_arch).smoke().replace(num_layers=1, d_model=32,
+                                                  num_heads=2, num_kv_heads=1,
+                                                  head_dim=16, d_ff=64)
+    eng = SpecEngine(tcfg, dcfg, max_len=max_len)
+    eng.init_params(jax.random.PRNGKey(0))
+    return eng, tcfg, dcfg
+
+
+def test_engine_rounds_commit_tokens():
+    eng, tcfg, _ = _engine()
+    B, M = 3, 10
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, M), 0, tcfg.vocab_size)
+    state = eng.start(prompts)
+    total = np.zeros(B, dtype=np.int64)
+    for r in range(4):
+        lengths = np.array([3, 5, 2])
+        state, res, _ = eng.spin_round(state, lengths, jax.random.PRNGKey(10 + r))
+        n = np.asarray(res.output_len)
+        assert np.all(n >= 1) and np.all(n <= lengths + 1)
+        total += n
+    for b in range(B):
+        assert len(state.committed[b]) == M + total[b]
+    # positions advance exactly by committed counts
+    np.testing.assert_array_equal(np.asarray(state.target_pos), M - 1 + total)
+
+
+def test_engine_self_draft_accepts_everything():
+    """Draft model == target model with no truncation => every draft token is
+    accepted (ratio == 1) — the strongest end-to-end exactness check."""
+    tcfg = get_config("qwen2.5-3b").smoke()
+    eng = SpecEngine(tcfg, tcfg, max_len=96)
+    kt, _ = jax.random.split(jax.random.PRNGKey(0))
+    eng.t_params = eng.target.init(kt)
+    eng.d_params = eng.t_params  # identical weights
+    B, M, L = 2, 8, 4
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, M), 0, tcfg.vocab_size)
+    state = eng.start(prompts)
+    for r in range(3):
+        state, res, _ = eng.spin_round(state, np.full(B, L),
+                                       jax.random.PRNGKey(5 + r),
+                                       vhat=tcfg.vocab_size)
+        assert np.all(np.asarray(res.accept_counts) == L), \
+            f"round {r}: {np.asarray(res.accept_counts)}"
+
+
+@pytest.mark.parametrize("target_arch", ["mamba2-130m", "zamba2-2.7b"])
+def test_engine_ssm_target_state_rollback(target_arch):
+    """SSM/hybrid targets roll their recurrent state back to the accepted
+    position.  Invariant: after any round, re-scoring the committed sequence
+    from scratch must reproduce the engine's incremental next-token logits."""
+    eng, tcfg, dcfg = _engine(target_arch=target_arch)
+    B, M = 2, 8
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, M), 0, tcfg.vocab_size)
+    state = eng.start(prompts)
+    for r in range(2):
+        state, res, _ = eng.spin_round(state, np.array([3, 4]),
+                                       jax.random.PRNGKey(20 + r))
+    # incremental: feed pending (== committed[-1], not yet in cache) against
+    # the engine's rolled-back cache
+    inc_logits, _ = eng.target.forward_window(
+        eng.t_params, state.pending[:, None], eng.t_cache, state.target_pos)
+    # fresh: full forward over the committed sequence, per row
+    for b in range(B):
+        assert state.committed[b][-1] == int(state.pending[b])
+        seq = jnp.asarray(state.committed[b])[None, :]
+        full, _ = eng.target.apply(eng.t_params, seq)
+        np.testing.assert_allclose(np.asarray(inc_logits[b, 0]),
+                                   np.asarray(full[0, -1]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_engine_attention_target_incremental_consistency():
+    """Same invariant for attention targets (pointer-only rollback)."""
+    eng, tcfg, _ = _engine(target_arch="phi4-mini-3.8b")
+    B, M = 2, 8
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, M), 0, tcfg.vocab_size)
+    state = eng.start(prompts)
+    for r in range(3):
+        state, res, _ = eng.spin_round(state, np.array([4, 2]),
+                                       jax.random.PRNGKey(30 + r))
+    inc_logits, _ = eng.target.forward_window(
+        eng.t_params, state.pending[:, None], eng.t_cache, state.target_pos)
+    for b in range(B):
+        assert state.committed[b][-1] == int(state.pending[b])
+        seq = jnp.asarray(state.committed[b])[None, :]
+        full, _ = eng.target.apply(eng.t_params, seq)
+        np.testing.assert_allclose(np.asarray(inc_logits[b, 0]),
+                                   np.asarray(full[0, -1]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Protocol-level integration
+# ---------------------------------------------------------------------------
+
+def _protocol(K=6, scheme="hete", engine=None, engine_state=None, **kw):
+    rng = np.random.default_rng(0)
+    devices = [DeviceProfile(T_S=0.03 * f, alpha=a, task=t)
+               for f, a, t in zip(rng.uniform(0.85, 1.15, K),
+                                  rng.choice([0.71, 0.74, 0.74, 0.86], K),
+                                  ["squad", "gsm8k", "mtbench", "mbpp"] * K)]
+    cfg = ChannelConfig()
+    ctrl = MultiSpinController(
+        scheme=scheme, q_tok_bits=cfg.q_tok_bits, bandwidth_hz=cfg.total_bandwidth_hz,
+        t_ver_model=VerificationLatencyModel(0.03, 0.002), L_max=20)
+    return MultiSpinProtocol(ctrl, cfg, devices, rng, engine=engine,
+                             engine_state=engine_state, **kw)
+
+
+def test_protocol_synthetic_rounds():
+    proto = _protocol(K=8)
+    out = proto.run(30)
+    assert out["tokens"] > 0
+    assert out["goodput"] > 0
+    # realized goodput within 30% of analytic prediction over 30 rounds
+    assert abs(out["goodput"] - out["mean_predicted_goodput"]) \
+        / out["mean_predicted_goodput"] < 0.3
+
+
+def test_protocol_scheme_ordering():
+    results = {s: _protocol(K=10, scheme=s).run(40)["goodput"]
+               for s in ("hete", "homo", "uni-bw", "fixed")}
+    assert results["hete"] >= 0.95 * results["homo"]
+    assert results["hete"] >= 0.95 * results["fixed"]
+
+
+def test_protocol_estimator_converges():
+    proto = _protocol(K=6, use_estimator=True)
+    proto.run(60)
+    true_alpha = np.array([d.alpha for d in proto.devices])
+    assert np.mean(np.abs(proto.estimator.alpha_hat - true_alpha)) < 0.12
+
+
+def test_protocol_checkpoint_restore():
+    proto = _protocol(K=5)
+    proto.run(5)
+    snap = proto.state_dict()
+    g1 = proto.run(5)["goodput"]
+    proto2 = _protocol(K=5)
+    proto2.load_state_dict(snap)
+    assert proto2._round_idx == 5
+    np.testing.assert_allclose(proto2.channel.avg_gains, proto.channel.avg_gains)
+
+
+def test_protocol_device_dropout_and_deadline():
+    proto = _protocol(K=8, deadline_factor=1.5)
+    rec = proto.run_round()
+    assert rec.active.sum() >= 1
+    proto.drop_device(0)
+    rec2 = proto.run_round()
+    assert len(rec2.lengths) == 7
+
+
+def test_protocol_with_real_engine():
+    tcfg = get_config("qwen2.5-3b").smoke()
+    dcfg = tcfg.replace(num_layers=1, d_model=32, num_heads=2, num_kv_heads=1,
+                        head_dim=16, d_ff=64, name="draft-smoke")
+    eng = SpecEngine(tcfg, dcfg, max_len=256)
+    eng.init_params(jax.random.PRNGKey(0))
+    K, M = 4, 6
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (K, M), 0, tcfg.vocab_size)
+    engine_state = eng.start(prompts)
+    proto = _protocol(K=K, engine=eng, engine_state=engine_state)
+    out = proto.run(4)
+    assert out["tokens"] >= 4 * K  # >= 1 token per device per round
+    assert all(len(c) > M for c in proto.engine_state.committed)

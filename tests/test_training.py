@@ -1,0 +1,222 @@
+"""Training substrate tests: optimizer, data, train loop, checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, load, save
+from repro.configs import get_config
+from repro.models import build_model
+from repro.training import (
+    DataConfig,
+    OptimizerConfig,
+    SyntheticLMDataset,
+    apply_gradients,
+    init_optimizer,
+    make_train_step,
+)
+from repro.training.optimizer import global_norm, schedule
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic_loss():
+    cfg = OptimizerConfig(learning_rate=0.1, warmup_steps=0, decay_steps=1000,
+                          weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = init_optimizer(cfg, params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = apply_gradients(cfg, params, grads, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_grad_clipping():
+    cfg = OptimizerConfig(grad_clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(4)}
+    state = init_optimizer(cfg, params)
+    huge = {"w": jnp.full(4, 1e6)}
+    _, _, m = apply_gradients(cfg, params, huge, state)
+    assert float(m["grad_norm"]) > 1e6  # reported raw norm
+
+
+@given(st.integers(0, 20000))
+@settings(max_examples=50, deadline=None)
+def test_schedule_bounds(step):
+    cfg = OptimizerConfig(learning_rate=1e-3, warmup_steps=100, decay_steps=10000)
+    lr = float(schedule(cfg, jnp.asarray(step)))
+    assert 0.0 <= lr <= cfg.learning_rate * (1 + 1e-6)
+    if step >= cfg.decay_steps:
+        assert lr == pytest.approx(cfg.learning_rate * cfg.min_lr_ratio, rel=1e-5)
+
+
+def test_bf16_optimizer_state():
+    cfg = OptimizerConfig(state_dtype="bfloat16")
+    params = {"w": jnp.ones(8)}
+    state = init_optimizer(cfg, params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_sharded():
+    cfg = DataConfig(vocab_size=101, seq_len=32, global_batch=8, seed=7)
+    ds = SyntheticLMDataset(cfg)
+    b1, b2 = ds.batch(3), ds.batch(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert ds.batch(4)["tokens"].shape == (8, 32)
+    assert (ds.batch(4)["tokens"] != b1["tokens"]).any()
+    sh = ds.shard(b1, worker=1, num_workers=4)
+    np.testing.assert_array_equal(sh["tokens"], b1["tokens"][2:4])
+
+
+def test_data_has_learnable_structure():
+    """The Markov structure must make bigrams predictable ~half the time."""
+    cfg = DataConfig(vocab_size=64, seq_len=256, global_batch=4, seed=0)
+    ds = SyntheticLMDataset(cfg)
+    toks = ds.batch(0)["tokens"]
+    pattern = (ds.state_shift[ds.state_of[toks[:, :-1]]] + toks[:, :-1]) % cfg.vocab_size
+    frac = float(np.mean(pattern == toks[:, 1:]))
+    assert 0.35 < frac < 0.75
+
+
+# ---------------------------------------------------------------------------
+# Train loop
+# ---------------------------------------------------------------------------
+
+def test_train_step_learns_on_synthetic_data():
+    cfg = get_config("tinyllama-1.1b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = OptimizerConfig(learning_rate=3e-3, warmup_steps=5, decay_steps=200)
+    opt_state = init_optimizer(opt_cfg, params)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    ds = SyntheticLMDataset(dcfg)
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+    losses = []
+    for step in range(30):
+        batch = {"tokens": jnp.asarray(ds.batch(step)["tokens"])}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses[::10]
+    assert np.isfinite(losses).all()
+
+
+def test_microbatched_grads_match_full_batch():
+    cfg = get_config("tinyllama-1.1b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = OptimizerConfig(warmup_steps=0)
+    ds = SyntheticLMDataset(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                       global_batch=8))
+    batch = {"tokens": jnp.asarray(ds.batch(0)["tokens"])}
+    s0 = init_optimizer(opt_cfg, params)
+    full = make_train_step(model, opt_cfg, microbatches=1)
+    micro = make_train_step(model, opt_cfg, microbatches=4)
+    p1, _, m1 = full(params, s0, batch)
+    p2, _, m2 = micro(params, init_optimizer(opt_cfg, params), batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                                   atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16),
+                  "d": jnp.array(3, jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    p = str(tmp_path / "ck.bin")
+    save(p, t, {"step": 7})
+    got, meta = load(p, jax.tree.map(jnp.zeros_like, t))
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    p = str(tmp_path / "ck.bin")
+    save(p, _tree())
+    raw = bytearray(open(p, "rb").read())
+    raw[-3] ^= 0xFF
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(ValueError, match="corrupt"):
+        load(p, _tree())
+
+
+def test_manager_retention_and_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in [1, 2, 3]:
+        mgr.save(s, {"w": jnp.full((2,), float(s))})
+    assert mgr.steps() == [2, 3]
+    got, meta = mgr.restore_latest({"w": jnp.zeros(2)})
+    assert meta["step"] == 3
+    np.testing.assert_array_equal(np.asarray(got["w"]), [3.0, 3.0])
+
+
+def test_manager_skips_corrupt_latest(tmp_path):
+    """Node dies mid-write of step 3 -> restore falls back to step 2."""
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    mgr.save(2, {"w": jnp.full((2,), 2.0)})
+    mgr.save(3, {"w": jnp.full((2,), 3.0)})
+    p3 = mgr._path(3)
+    raw = bytearray(open(p3, "rb").read())
+    raw[-1] ^= 0xFF
+    open(p3, "wb").write(bytes(raw))
+    got, meta = mgr.restore_latest({"w": jnp.zeros(2)})
+    assert meta["step"] == 2
+
+
+def test_manager_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save_async(10, {"w": jnp.ones(4)})
+    mgr.wait()
+    assert mgr.steps() == [10]
+
+
+def test_restart_resumes_training_bitexact(tmp_path):
+    """Kill-and-restart: training from a checkpoint reproduces the
+    uninterrupted run exactly (data pipeline is step-indexed)."""
+    cfg = get_config("tinyllama-1.1b").smoke()
+    model = build_model(cfg)
+    opt_cfg = OptimizerConfig(warmup_steps=0)
+    ds = SyntheticLMDataset(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                       global_batch=4))
+    step_fn = jax.jit(make_train_step(model, opt_cfg))
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = init_optimizer(opt_cfg, params)
+    mgr = CheckpointManager(str(tmp_path))
+    # run 6 steps, checkpoint at 3
+    for s in range(6):
+        if s == 3:
+            mgr.save(s, {"params": params, "opt": opt_state})
+        batch = {"tokens": jnp.asarray(ds.batch(s)["tokens"])}
+        params, opt_state, _ = step_fn(params, opt_state, batch)
+    # restart from step 3
+    restored, meta = mgr.restore_latest(
+        {"params": model.init(jax.random.PRNGKey(1)),
+         "opt": init_optimizer(opt_cfg, model.init(jax.random.PRNGKey(1)))})
+    p2, o2 = restored["params"], restored["opt"]
+    for s in range(meta["step"], 6):
+        batch = {"tokens": jnp.asarray(ds.batch(s)["tokens"])}
+        p2, o2, _ = step_fn(p2, o2, batch)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,237 @@
+"""Correctness of speculative verification (paper eq. 4-5).
+
+The load-bearing property: the verified output is distributed EXACTLY as
+target-model sampling, for any draft distribution — including the paper's
+top-|V^hat| truncated uploads.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.drafting import generate_drafts
+from repro.core.verification import (
+    VerifyResult,
+    sparse_to_dense,
+    truncate_renormalize,
+    verify_drafts,
+)
+
+
+def _random_dists(key, B, L, V, concentration=1.0):
+    k1, k2 = jax.random.split(key)
+    p = jax.random.dirichlet(k1, jnp.full((V,), concentration), (B, L + 1))
+    q = jax.random.dirichlet(k2, jnp.full((V,), concentration), (B, L))
+    return p, q
+
+
+def _draft_from_q(key, q):
+    """Sample draft tokens from q rows: q (B, L, V) -> tokens, probs."""
+    B, L, V = q.shape
+    toks = jax.random.categorical(key, jnp.log(q), axis=-1)
+    probs = jnp.take_along_axis(q, toks[..., None], axis=-1)[..., 0]
+    return toks.astype(jnp.int32), probs
+
+
+def _run_verify(key, p, q, toks, probs, **kw):
+    """p: (B, L+1, V) target dists -> logits; q dense."""
+    logits = jnp.log(jnp.maximum(p, 1e-30))
+    return verify_drafts(key, toks, probs, logits, q_dense=q, **kw)
+
+
+def test_verify_shapes_and_ranges():
+    key = jax.random.PRNGKey(0)
+    B, L, V = 8, 5, 13
+    p, q = _random_dists(key, B, L, V)
+    toks, probs = _draft_from_q(jax.random.PRNGKey(1), q)
+    res = _run_verify(jax.random.PRNGKey(2), p, q, toks, probs)
+    assert res.accept_counts.shape == (B,)
+    assert res.output_tokens.shape == (B, L + 1)
+    assert np.all(np.asarray(res.accept_counts) >= 0)
+    assert np.all(np.asarray(res.accept_counts) <= L)
+    assert np.all(np.asarray(res.output_len) == np.asarray(res.accept_counts) + 1)
+    assert np.all(np.asarray(res.output_tokens) >= 0)
+    assert np.all(np.asarray(res.output_tokens) < V)
+
+
+def test_identical_dists_accept_everything():
+    """q == p => acceptance probability 1 for every position."""
+    key = jax.random.PRNGKey(0)
+    B, L, V = 16, 6, 11
+    p, _ = _random_dists(key, B, L, V)
+    q = p[:, :L]
+    toks, probs = _draft_from_q(jax.random.PRNGKey(1), q)
+    res = _run_verify(jax.random.PRNGKey(2), p, q, toks, probs)
+    assert np.all(np.asarray(res.accept_counts) == L)
+
+
+def test_disjoint_dists_reject_first():
+    """Draft mass disjoint from target support => immediate rejection and the
+    calibrated token is exactly a target sample."""
+    B, L, V = 4096, 3, 8
+    # target on {0..3}, draft on {4..7}
+    p_row = jnp.array([0.4, 0.3, 0.2, 0.1, 0, 0, 0, 0.0])
+    q_row = jnp.array([0, 0, 0, 0, 0.25, 0.25, 0.25, 0.25])
+    p = jnp.tile(p_row, (B, L + 1, 1))
+    q = jnp.tile(q_row, (B, L, 1))
+    toks, probs = _draft_from_q(jax.random.PRNGKey(1), q)
+    res = _run_verify(jax.random.PRNGKey(2), p, q, toks, probs)
+    assert np.all(np.asarray(res.accept_counts) == 0)
+    first = np.asarray(res.output_tokens[:, 0])
+    freq = np.bincount(first, minlength=V) / B
+    np.testing.assert_allclose(freq[:4], np.asarray(p_row[:4]), atol=0.03)
+    assert np.all(freq[4:] == 0)
+
+
+@pytest.mark.parametrize("concentration", [0.5, 2.0])
+def test_output_marginal_matches_target(concentration):
+    """THE speculative-sampling theorem: the first output token's marginal
+    must equal the target distribution regardless of the draft distribution.
+
+    Monte-Carlo with a chi^2-style tolerance. Single (p, q) pair shared by
+    all rows; randomness over rows gives the empirical marginal.
+    """
+    B, L, V = 20000, 4, 6
+    kp, kq, kd, kv = jax.random.split(jax.random.PRNGKey(int(concentration * 10)), 4)
+    p_row = jax.random.dirichlet(kp, jnp.full((V,), concentration))
+    q_row = jax.random.dirichlet(kq, jnp.full((V,), concentration))
+    p = jnp.tile(p_row, (B, L + 1, 1))
+    q = jnp.tile(q_row, (B, L, 1))
+    toks, probs = _draft_from_q(kd, q)
+    res = _run_verify(kv, p, q, toks, probs)
+    first = np.asarray(res.output_tokens[:, 0])
+    freq = np.bincount(first, minlength=V) / B
+    # 4-sigma multinomial tolerance per bin
+    sigma = np.sqrt(np.asarray(p_row) * (1 - np.asarray(p_row)) / B)
+    assert np.all(np.abs(freq - np.asarray(p_row)) < 4 * sigma + 1e-3), \
+        (freq, np.asarray(p_row))
+
+
+def test_output_marginal_with_truncated_upload():
+    """Exactness must survive the paper's top-|V^hat| truncation, because the
+    device samples from the SAME truncated+renormalized distribution that it
+    uploads."""
+    B, L, V, VHAT = 20000, 3, 8, 3
+    kp, kq, kd, kv = jax.random.split(jax.random.PRNGKey(7), 4)
+    p_row = jax.random.dirichlet(kp, jnp.ones((V,)))
+    q_full = jax.random.dirichlet(kq, jnp.ones((V,)))
+    idx, val = truncate_renormalize(jnp.tile(q_full, (B, L, 1)), VHAT)
+    q_trunc = sparse_to_dense(idx, val, V)
+    toks, probs = _draft_from_q(kd, q_trunc)
+    logits = jnp.log(jnp.maximum(jnp.tile(p_row, (B, L + 1, 1)), 1e-30))
+    res = verify_drafts(kv, toks, probs, logits, q_idx=idx, q_val=val)
+    first = np.asarray(res.output_tokens[:, 0])
+    freq = np.bincount(first, minlength=V) / B
+    sigma = np.sqrt(np.asarray(p_row) * (1 - np.asarray(p_row)) / B)
+    assert np.all(np.abs(freq - np.asarray(p_row)) < 4 * sigma + 1e-3)
+
+
+def test_second_token_marginal():
+    """Joint exactness: P(out_2 = v | out_1) must follow the target chain.
+
+    With position-independent target dist p (iid chain), the SECOND output
+    token marginal must also equal p."""
+    B, L, V = 20000, 4, 6
+    kp, kq, kd, kv = jax.random.split(jax.random.PRNGKey(3), 4)
+    p_row = jax.random.dirichlet(kp, jnp.ones((V,)))
+    q_row = jax.random.dirichlet(kq, jnp.ones((V,)))
+    p = jnp.tile(p_row, (B, L + 1, 1))
+    q = jnp.tile(q_row, (B, L, 1))
+    toks, probs = _draft_from_q(kd, q)
+    res = _run_verify(kv, p, q, toks, probs)
+    out = np.asarray(res.output_tokens)
+    n = np.asarray(res.output_len)
+    second = out[n >= 2, 1]
+    freq = np.bincount(second, minlength=V) / len(second)
+    sigma = np.sqrt(np.asarray(p_row) * (1 - np.asarray(p_row)) / len(second))
+    assert np.all(np.abs(freq - np.asarray(p_row)) < 4 * sigma + 2e-3)
+
+
+def test_acceptance_rate_matches_theory():
+    """E[A] must equal sum_x min(p(x), q(x)) (the eq.-10 alpha for iid rows)."""
+    B, L, V = 40000, 1, 10
+    kp, kq, kd, kv = jax.random.split(jax.random.PRNGKey(11), 4)
+    p_row = jax.random.dirichlet(kp, jnp.ones((V,)))
+    q_row = jax.random.dirichlet(kq, jnp.ones((V,)))
+    alpha_theory = float(jnp.sum(jnp.minimum(p_row, q_row)))
+    p = jnp.tile(p_row, (B, L + 1, 1))
+    q = jnp.tile(q_row, (B, L, 1))
+    toks, probs = _draft_from_q(kd, q)
+    res = _run_verify(kv, p, q, toks, probs)
+    alpha_emp = float(np.mean(np.asarray(res.accept_counts) == 1))
+    assert abs(alpha_emp - alpha_theory) < 0.01
+
+
+def test_heterogeneous_draft_lengths_zero_padding():
+    """Paper Sec. V: shorter drafts zero-padded to L_max must behave exactly
+    like unpadded verification of the true length."""
+    B, L, V = 8192, 5, 6
+    kp, kq, kd, kv = jax.random.split(jax.random.PRNGKey(5), 4)
+    p_row = jax.random.dirichlet(kp, jnp.ones((V,)))
+    q_row = jax.random.dirichlet(kq, jnp.ones((V,)))
+    p = jnp.tile(p_row, (B, L + 1, 1))
+    q = jnp.tile(q_row, (B, L, 1))
+    toks, probs = _draft_from_q(kd, q)
+    lens = jnp.concatenate([jnp.full((B // 2,), 2), jnp.full((B - B // 2,), L)])
+    res = _run_verify(kv, p, q, toks, probs, draft_len=lens)
+    n = np.asarray(res.accept_counts)
+    assert np.all(n[:B // 2] <= 2)
+    # acceptance stats of the short rows match an unpadded L=2 run
+    alpha = float(jnp.sum(jnp.minimum(p_row, q_row)))
+    expect = (1 - alpha ** 3) / (1 - alpha)  # eq. 12 with L=2
+    got = np.mean(n[:B // 2] + 1)
+    assert abs(got - expect) < 0.05 * expect
+    # first-token marginal still exact on short rows
+    freq = np.bincount(np.asarray(res.output_tokens[:B // 2, 0]), minlength=V) / (B // 2)
+    sigma = np.sqrt(np.asarray(p_row) * (1 - np.asarray(p_row)) / (B // 2))
+    assert np.all(np.abs(freq - np.asarray(p_row)) < 4 * sigma + 2e-3)
+
+
+def test_expected_accepted_matches_eq12():
+    """Realized E[N|L] must track the paper's geometric formula under the
+    iid-acceptance approximation (exact here by construction)."""
+    B, L, V = 30000, 6, 8
+    kp, kq, kd, kv = jax.random.split(jax.random.PRNGKey(13), 4)
+    p_row = jax.random.dirichlet(kp, jnp.ones((V,)))
+    q_row = jax.random.dirichlet(kq, jnp.ones((V,)))
+    alpha = float(jnp.sum(jnp.minimum(p_row, q_row)))
+    p = jnp.tile(p_row, (B, L + 1, 1))
+    q = jnp.tile(q_row, (B, L, 1))
+    toks, probs = _draft_from_q(kd, q)
+    res = _run_verify(kv, p, q, toks, probs)
+    expect = (1 - alpha ** (L + 1)) / (1 - alpha)       # eq. 12
+    got = float(np.mean(np.asarray(res.output_len)))
+    assert abs(got - expect) / expect < 0.03
+
+
+def test_drafting_probs_match_uploaded_dists():
+    """generate_drafts: the sampled token's prob must equal its entry in the
+    uploaded sparse distribution, and pos/cache bookkeeping must line up."""
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("qwen2.5-3b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, L, VHAT = 3, 8, 4, 16
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    cache = model.init_cache(B, 32, jnp.float32)
+    _, cache, _ = model.prefill(params, prompt[:, :-1], cache)
+    pending = prompt[:, -1]
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    res = generate_drafts(model, params, cache, pending, pos, L,
+                          jax.random.PRNGKey(2), vhat=VHAT)
+    assert res.tokens.shape == (B, L)
+    assert res.q_idx.shape == (B, L, VHAT)
+    # every drafted token appears in its uploaded support with the right prob
+    for b in range(B):
+        for l in range(L):
+            tok = int(res.tokens[b, l])
+            row_idx = np.asarray(res.q_idx[b, l])
+            row_val = np.asarray(res.q_val[b, l])
+            assert tok in row_idx
+            j = int(np.where(row_idx == tok)[0][0])
+            np.testing.assert_allclose(float(res.probs[b, l]), row_val[j],
+                                       rtol=1e-5)
+            np.testing.assert_allclose(row_val.sum(), 1.0, rtol=1e-5)
