@@ -3,52 +3,35 @@
 Claims checked: Hete >= Uni-BW >= / Homo >= Fixed everywhere; ~88% gain of
 Hete over Fixed at the smallest budget; the gain narrows as B grows
 (communication-limited -> computation-limited transition).
+
+Each (pair, B, scheme, seed) point is one ``MultiSpinCell`` built from a
+``CellConfig``; scheme solvers resolve through the registry.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.channel import ChannelState
-from repro.core.draft_control import (
-    solve_fixed,
-    solve_heterogeneous,
-    solve_homogeneous_exhaustive,
-    solve_uniform_bandwidth,
-)
-
-from .common import K_DEFAULT, load_calibration, paper_channel, paper_devices
+from .common import K_DEFAULT, load_calibration, planned_cell_goodput
 
 BUDGETS_MHZ = [1.0, 2.0, 5.0, 10.0, 20.0, 40.0]
+SCHEMES = ("hete", "homo", "uni-bw", "fixed")
 
 
 def run(fast: bool = True) -> list[dict]:
     rows = []
-    n_seeds = 3 if fast else 10
+    # the cell samples its own channel stream, so the fast mode needs a few
+    # more seeds than the legacy solver-wired version for stable gain trends
+    n_seeds = 10 if fast else 20
     for pair in ("llama2", "qwen35"):
         calib = load_calibration()[pair]
-        cfg = paper_channel(pair)
-        Q = cfg.q_tok_bits
-        K = K_DEFAULT
-        T_ver = calib["t_fix"] + K * calib["t_lin"]
         gains = {}
         for B_mhz in BUDGETS_MHZ:
-            B = B_mhz * 1e6
-            acc = {s: [] for s in ("hete", "homo", "uni-bw", "fixed")}
-            for seed in range(n_seeds):
-                rng = np.random.default_rng(seed)
-                tasks, alphas = paper_devices(pair, K, rng)
-                ch = ChannelState.sample(cfg, K, rng)
-                t_dev = rng.uniform(0.85, 1.15, K) * calib["T_S"]
-                kw = dict(T_S=t_dev, r=ch.rates, Q_tok=Q, B=B, T_ver=T_ver)
-                acc["hete"].append(
-                    solve_heterogeneous(alphas, L_max=25, **kw).goodput)
-                acc["homo"].append(
-                    solve_homogeneous_exhaustive(alphas, L_max=25, **kw).goodput)
-                acc["uni-bw"].append(
-                    solve_uniform_bandwidth(alphas, L_max=25, **kw).goodput)
-                acc["fixed"].append(solve_fixed(alphas, **kw).goodput)
-            m = {s: float(np.mean(v)) for s, v in acc.items()}
+            m = {s: float(np.mean(
+                    [planned_cell_goodput(s, pair, K_DEFAULT, seed, calib,
+                                          B_hz=B_mhz * 1e6)
+                     for seed in range(n_seeds)]))
+                 for s in SCHEMES}
             gains[B_mhz] = m["hete"] / m["fixed"] - 1.0
             rows.append({
                 "name": f"bandwidth_sweep/{pair}/B={B_mhz}MHz",
@@ -61,10 +44,11 @@ def run(fast: bool = True) -> list[dict]:
         rows.append({
             "name": f"bandwidth_sweep/{pair}/summary",
             "us_per_call": "",
-            "derived": (f"gain_at_min_B={100 * gains[BUDGETS_MHZ[0]]:.0f}% "
-                        f"(paper ~88%) gain_at_max_B="
+            "derived": (f"gain at {BUDGETS_MHZ[0]}MHz: "
+                        f"{100 * gains[BUDGETS_MHZ[0]]:.0f}% -> "
+                        f"{BUDGETS_MHZ[-1]}MHz: "
                         f"{100 * gains[BUDGETS_MHZ[-1]]:.0f}% "
-                        f"narrows={gains[BUDGETS_MHZ[0]] > gains[BUDGETS_MHZ[-1]]}"),
+                        f"narrows={gains[BUDGETS_MHZ[-1]] < gains[BUDGETS_MHZ[0]]}"),
         })
     return rows
 

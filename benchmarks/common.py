@@ -9,11 +9,13 @@ Trends and gains are structural — constants only set the scale.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 
 import numpy as np
 
+from repro.api import CellConfig, MultiSpinCell, Request
 from repro.core.channel import ChannelConfig, ChannelState
 from repro.core.draft_control import (
     solve_centralized,
@@ -46,6 +48,28 @@ def paper_devices(pair: str, K: int, rng: np.random.Generator):
     tasks = rng.choice(list(alphas_by_task), K)
     alphas = np.array([alphas_by_task[t] for t in tasks])
     return tasks, alphas
+
+
+def planned_cell_goodput(scheme: str, pair: str, K: int, seed: int,
+                         calib: dict, B_hz: float | None = None) -> float:
+    """Analytic goodput of one planned round for a freshly sampled
+    ``MultiSpinCell`` at the paper's device mixture — the shared recipe of
+    the Fig.-7/8 sweeps (``B_hz`` overrides the channel's total budget)."""
+    rng = np.random.default_rng(seed)
+    tasks, alphas = paper_devices(pair, K, rng)
+    t_dev = rng.uniform(0.85, 1.15, K) * calib["T_S"]
+    channel = paper_channel(pair)
+    if B_hz is not None:
+        channel = dataclasses.replace(channel, total_bandwidth_hz=B_hz)
+    cfg = CellConfig(scheme=scheme, channel=channel,
+                     t_ver_fix=calib["t_fix"], t_ver_lin=calib["t_lin"],
+                     L_max=25, max_batch=K, seed=seed)
+    cell = MultiSpinCell(cfg)
+    for i in range(K):
+        cell.submit(Request(rid=i, prompt_len=8, max_new_tokens=10 ** 9,
+                            alpha=float(alphas[i]), T_S=float(t_dev[i]),
+                            task=str(tasks[i])))
+    return cell.plan().goodput
 
 
 def _fig6_predict(pair: str, T_S: float, t_fix: float, t_lin: float,

@@ -1,9 +1,10 @@
-"""End-to-end Multi-SPIN serving with REAL models.
+"""End-to-end Multi-SPIN serving with REAL models through the session API.
 
 K simulated edge devices each run a small draft LM; the server runs a larger
-target LM; every round the controller re-solves draft control from the
-current channel state, the engine drafts + batch-verifies on real weights,
-and goodput is accounted with the paper's latency model.
+target LM; every round the cell re-solves draft control from the current
+channel state, the ``EngineBackend`` drafts + batch-verifies on real
+weights, and goodput is accounted with the paper's latency model.  The
+online acceptance estimator feeds planning (protocol step 5).
 
   PYTHONPATH=src python examples/multi_spin_serving.py
 """
@@ -11,11 +12,15 @@ and goodput is accounted with the paper's latency model.
 import jax
 import numpy as np
 
+from repro.api import (
+    CellConfig,
+    ChannelConfig,
+    EngineBackend,
+    MultiSpinCell,
+    Request,
+    SpecEngine,
+)
 from repro.configs import get_config
-from repro.core.channel import ChannelConfig
-from repro.core.controller import MultiSpinController, VerificationLatencyModel
-from repro.core.protocol import DeviceProfile, MultiSpinProtocol
-from repro.serving import SpecEngine
 
 K, PROMPT_LEN, ROUNDS = 4, 12, 6
 rng = np.random.default_rng(0)
@@ -32,27 +37,25 @@ engine = SpecEngine(target_cfg, draft_cfg, max_len=256)
 engine.init_params(jax.random.PRNGKey(0))
 prompts = jax.random.randint(jax.random.PRNGKey(1), (K, PROMPT_LEN), 0,
                              target_cfg.vocab_size)
-engine_state = engine.start(prompts)
+backend = EngineBackend(engine, engine.start(prompts))
 
-channel = ChannelConfig(vocab_size=target_cfg.vocab_size)
-controller = MultiSpinController(
-    scheme="hete", q_tok_bits=channel.q_tok_bits,
-    bandwidth_hz=channel.total_bandwidth_hz,
-    t_ver_model=VerificationLatencyModel(0.035, 0.0177), L_max=8)
-devices = [DeviceProfile(T_S=0.009 * f, alpha=0.8, task="mixed")
-           for f in rng.uniform(0.85, 1.15, K)]
-
-proto = MultiSpinProtocol(controller, channel, devices, rng, engine=engine,
-                          engine_state=engine_state, use_estimator=True)
+config = CellConfig(
+    scheme="hete", channel=ChannelConfig(vocab_size=target_cfg.vocab_size),
+    t_ver_fix=0.035, t_ver_lin=0.0177, L_max=8, max_batch=K,
+    use_estimator=True)
+cell = MultiSpinCell(config, backend=backend, rng=rng)
+for i, f in enumerate(rng.uniform(0.85, 1.15, K)):
+    cell.submit(Request(rid=i, prompt_len=PROMPT_LEN, max_new_tokens=10 ** 9,
+                        alpha=0.8, T_S=0.009 * f, task="mixed"))
 
 print(f"serving {K} devices, target={target_cfg.name}, draft={draft_cfg.name}")
 for i in range(ROUNDS):
-    rec = proto.run_round()
+    rec = cell.step()
     print(f"round {i}: L={rec.lengths} accepted={rec.accepted} "
           f"goodput={rec.realized_goodput:.1f} tok/s  "
-          f"alpha_hat={np.round(proto.estimator.alpha_hat, 2)}")
+          f"alpha_hat={np.round(cell.estimator.alpha_hat, 2)}")
 
 print("\nfinal stream lengths:",
-      [len(c) for c in proto.engine_state.committed])
+      [len(c) for c in backend.state.committed])
 print("summary:", {k: round(v, 2) if isinstance(v, float) else v
-                   for k, v in proto.summary().items()})
+                   for k, v in cell.summary().items()})

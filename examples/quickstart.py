@@ -1,57 +1,57 @@
-"""Quickstart: solve multi-access draft control and run a Multi-SPIN round.
+"""Quickstart: stand up a Multi-SPIN cell and run the paper's control loop.
 
-Runs in seconds on CPU.  Demonstrates the paper's full control loop:
-channel sampling -> draft-length + bandwidth optimization (Algorithm 1) ->
-a simulated Multi-SPIN round with realized goodput.
+Runs in seconds on CPU.  Demonstrates the full loop through the session
+API: channel sampling -> draft-length + bandwidth optimization
+(Algorithm 1) -> simulated Multi-SPIN rounds with realized goodput.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core.channel import ChannelConfig
-from repro.core.controller import MultiSpinController, VerificationLatencyModel
-from repro.core.protocol import DeviceProfile, MultiSpinProtocol
+from repro.api import CellConfig, MultiSpinCell, Request, available_schemes
 
 K = 12
 rng = np.random.default_rng(0)
 
 # 1. a heterogeneous edge cell: four task types (paper Table I) and +-15%
-#    device compute spread
+#    device compute spread, described as requests joining the cell
 alphas = {"mbpp": 0.8582, "gsm8k": 0.7390, "mtbench": 0.7393, "squad": 0.7126}
 tasks = rng.choice(list(alphas), K)
-devices = [DeviceProfile(T_S=0.009 * f, alpha=alphas[t], task=t)
-           for f, t in zip(rng.uniform(0.85, 1.15, K), tasks)]
+requests = [Request(rid=i, prompt_len=8, max_new_tokens=10 ** 9,
+                    alpha=alphas[t], T_S=0.009 * f, task=t)
+            for i, (f, t) in enumerate(zip(rng.uniform(0.85, 1.15, K), tasks))]
 
-# 2. the server-side controller (Algorithm 1: heterogeneous lengths)
-channel = ChannelConfig()
-controller = MultiSpinController(
-    scheme="hete",
-    q_tok_bits=channel.q_tok_bits,
-    bandwidth_hz=channel.total_bandwidth_hz,
-    t_ver_model=VerificationLatencyModel(t_fix=0.035, t_lin=0.0177),
-)
+# 2. one JSON-serializable config: scheme (Algorithm 1: heterogeneous
+#    lengths), channel, and the verification latency model
+config = CellConfig(scheme="hete", t_ver_fix=0.035, t_ver_lin=0.0177,
+                    max_batch=K)
+print("registered schemes:", ", ".join(available_schemes()))
 
 # 3. run 20 rounds
-proto = MultiSpinProtocol(controller, channel, devices, rng)
+cell = MultiSpinCell(config, rng=np.random.default_rng(0))
+for r in requests:
+    cell.submit(r)
 for i in range(20):
-    rec = proto.run_round()
+    rec = cell.step()
     if i < 3 or i == 19:
         print(f"round {i:2d}: L={rec.lengths} "
               f"goodput={rec.realized_goodput:6.1f} tok/s "
               f"(predicted {rec.predicted_goodput:6.1f})")
 
-summary = proto.summary()
+summary = cell.summary()
 print(f"\n{summary['rounds']} rounds, {summary['tokens']:.0f} tokens, "
       f"sum goodput {summary['goodput']:.1f} tok/s")
 
-# 4. compare against the heterogeneity-agnostic baseline
-proto_fixed = MultiSpinProtocol(
-    MultiSpinController(scheme="fixed", q_tok_bits=channel.q_tok_bits,
-                        bandwidth_hz=channel.total_bandwidth_hz,
-                        t_ver_model=VerificationLatencyModel(0.035, 0.0177)),
-    channel, devices, np.random.default_rng(0))
-fixed = proto_fixed.run(20)
+# 4. compare against the heterogeneity-agnostic baseline — same cell, one
+#    config field changed
+fixed_cell = MultiSpinCell(CellConfig(scheme="fixed", L_fixed=8, max_batch=K),
+                           rng=np.random.default_rng(0))
+for r in requests:
+    fixed_cell.submit(Request(rid=r.rid, prompt_len=r.prompt_len,
+                              max_new_tokens=10 ** 9, alpha=r.alpha,
+                              T_S=r.T_S, task=r.task))
+fixed = fixed_cell.run(20)
 print(f"fixed BW&L baseline: {fixed['goodput']:.1f} tok/s "
       f"(+{100 * (summary['goodput'] / fixed['goodput'] - 1):.0f}% from joint "
       f"draft control)")

@@ -1,0 +1,77 @@
+"""The one-stop Multi-SPIN serving API.
+
+Everything needed to stand up, drive, and extend a Multi-SPIN cell::
+
+    from repro.api import CellConfig, MultiSpinCell, Request
+
+    cell = MultiSpinCell(CellConfig(scheme="hete", max_batch=4))
+    cell.submit(Request(rid=0, prompt_len=8, max_new_tokens=64,
+                        alpha=0.86, T_S=0.009))
+    cell.drain()
+    print(cell.scheduler.stats.goodput)
+
+Scheme solvers are pluggable (``@register_scheme``), as are verification
+backends (``SyntheticBackend`` for analytic sweeps, ``EngineBackend`` for
+real JAX models).  ``SpecEngine`` is resolved lazily to keep the analytic
+path free of jax import cost.
+"""
+
+from repro.core.channel import ChannelConfig, ChannelState  # noqa: F401
+from repro.core.controller import (  # noqa: F401
+    AcceptanceEstimator,
+    MultiSpinController,
+    VerificationLatencyModel,
+)
+from repro.core.protocol import DeviceProfile, MultiSpinProtocol  # noqa: F401 (deprecated shim)
+from repro.core.schemes import (  # noqa: F401
+    available_schemes,
+    get_scheme,
+    register_scheme,
+)
+from repro.serving.backends import (  # noqa: F401
+    EngineBackend,
+    SyntheticBackend,
+    VerificationBackend,
+)
+from repro.serving.cell import (  # noqa: F401
+    SCHEDULES,
+    CellConfig,
+    MultiSpinCell,
+    RoundRecord,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    Request,
+    RoundScheduler,
+    SchedulerStats,
+)
+
+__all__ = [
+    "AcceptanceEstimator",
+    "CellConfig",
+    "ChannelConfig",
+    "ChannelState",
+    "DeviceProfile",
+    "EngineBackend",
+    "MultiSpinCell",
+    "MultiSpinController",
+    "MultiSpinProtocol",
+    "Request",
+    "RoundRecord",
+    "RoundScheduler",
+    "SCHEDULES",
+    "SchedulerStats",
+    "SpecEngine",
+    "SyntheticBackend",
+    "VerificationBackend",
+    "VerificationLatencyModel",
+    "available_schemes",
+    "get_scheme",
+    "register_scheme",
+]
+
+
+def __getattr__(name):
+    if name == "SpecEngine":
+        from repro.serving.spec_engine import SpecEngine
+        return SpecEngine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

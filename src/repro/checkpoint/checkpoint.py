@@ -1,6 +1,8 @@
 """Fault-tolerant pytree checkpointing.
 
-Format: one msgpack blob (zstd-compressed) holding flattened key-paths ->
+Format: one msgpack blob (zstd-compressed when ``zstandard`` is available,
+stdlib zlib otherwise; detected from the frame header on load) holding
+flattened key-paths ->
 {dtype, shape, raw bytes}, plus a manifest with a SHA-256 content hash and
 user metadata.  Writes are crash-safe: tmp file + fsync + atomic rename; a
 half-written checkpoint can never shadow a good one.  ``CheckpointManager``
@@ -14,17 +16,40 @@ from __future__ import annotations
 import hashlib
 import os
 import threading
+import zlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # gated optional dep: fall back to stdlib zlib
+    zstandard = None
 
 Params = Any
 
 _MAGIC = b"REPRO_CKPT1"
+_ZSTD_FRAME_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(data: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(data)
+    return zlib.compress(data, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    """Codec is detected from the frame header, so checkpoints written with
+    either codec load on any host that has the matching library."""
+    if blob[:4] == _ZSTD_FRAME_MAGIC:
+        if zstandard is None:
+            raise ValueError("checkpoint is zstd-compressed but zstandard "
+                             "is not installed")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _flatten(tree: Params) -> dict[str, np.ndarray]:
@@ -61,8 +86,7 @@ def save(path: str, tree: Params, metadata: dict | None = None):
         },
         "metadata": metadata or {},
     }
-    blob = zstandard.ZstdCompressor(level=3).compress(
-        msgpack.packb(payload, use_bin_type=True))
+    blob = _compress(msgpack.packb(payload, use_bin_type=True))
     digest = hashlib.sha256(blob).digest()
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
@@ -84,8 +108,11 @@ def load(path: str, template: Params):
     digest, blob = raw[len(_MAGIC):len(_MAGIC) + 32], raw[len(_MAGIC) + 32:]
     if hashlib.sha256(blob).digest() != digest:
         raise ValueError(f"{path}: content hash mismatch (corrupt)")
-    payload = msgpack.unpackb(zstandard.ZstdDecompressor().decompress(blob),
-                              raw=False)
+    try:
+        decompressed = _decompress(blob)
+    except zlib.error as e:
+        raise ValueError(f"{path}: decompression failed ({e})") from e
+    payload = msgpack.unpackb(decompressed, raw=False)
     arrays = {
         k: np.frombuffer(v["data"], dtype=np.dtype(v["dtype"])).reshape(v["shape"])
         for k, v in payload["arrays"].items()

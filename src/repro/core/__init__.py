@@ -15,9 +15,26 @@ from . import (  # noqa: F401
     channel,
     controller,
     draft_control,
-    drafting,
     goodput,
     lambertw,
-    protocol,
-    verification,
+    schemes,
 )
+
+# Resolved lazily:
+#   * `protocol` is the deprecated shim over repro.serving.cell; importing it
+#     eagerly here would close an import cycle (core -> serving.cell -> core);
+#   * `drafting` / `verification` import jax, and the analytic layer
+#     (channel, draft control, cell with a synthetic backend) must stay
+#     importable without paying the jax startup cost.
+_LAZY = ("protocol", "drafting", "verification")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

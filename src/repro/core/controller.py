@@ -13,15 +13,16 @@ import dataclasses
 
 import numpy as np
 
-from .draft_control import (
-    DraftControlSolution,
-    solve_fixed,
-    solve_heterogeneous,
-    solve_homogeneous_exhaustive,
-    solve_uniform_bandwidth,
-)
+from .draft_control import DraftControlSolution
+from .schemes import available_schemes, get_scheme
 
-SCHEMES = ("hete", "homo", "uni-bw", "fixed", "hete-packed")
+def __getattr__(name):
+    # Derived live from the scheme registry — register new schemes in
+    # ``repro.core.schemes``; a scheme registered after import (the
+    # ``@register_scheme`` extension point) is visible here immediately.
+    if name == "SCHEMES":
+        return available_schemes()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
@@ -47,30 +48,11 @@ class MultiSpinController:
     n_lam: int = 40
 
     def __post_init__(self):
-        assert self.scheme in SCHEMES, self.scheme
+        self.solver = get_scheme(self.scheme)
 
     def plan(self, alphas: np.ndarray, T_S: np.ndarray,
              rates: np.ndarray) -> DraftControlSolution:
-        K = len(alphas)
-        T_ver = self.t_ver_model(K)
-        kw = dict(T_S=T_S, r=rates, Q_tok=self.q_tok_bits,
-                  B=self.bandwidth_hz, T_ver=T_ver)
-        if self.scheme == "hete":
-            return solve_heterogeneous(alphas, L_max=self.L_max,
-                                       n_phi=self.n_phi, n_lam=self.n_lam, **kw)
-        if self.scheme == "hete-packed":
-            from .beyond import TokenBudgetVerifier, solve_heterogeneous_packed
-            verifier = TokenBudgetVerifier.from_affine(
-                self.t_ver_model.t_fix, self.t_ver_model.t_lin)
-            kw.pop("T_ver")
-            return solve_heterogeneous_packed(
-                alphas, verifier=verifier, L_max=self.L_max,
-                n_phi=self.n_phi, n_lam=self.n_lam, **kw)
-        if self.scheme == "homo":
-            return solve_homogeneous_exhaustive(alphas, L_max=self.L_max, **kw)
-        if self.scheme == "uni-bw":
-            return solve_uniform_bandwidth(alphas, L_max=self.L_max, **kw)
-        return solve_fixed(alphas, L_fixed=self.L_fixed, **kw)
+        return self.solver(self, alphas, T_S, rates)
 
 
 class AcceptanceEstimator:
@@ -78,9 +60,21 @@ class AcceptanceEstimator:
     verification outcomes (used when devices do not report task profiles)."""
 
     def __init__(self, K: int, prior: float = 0.8, decay: float = 0.9):
+        self.prior = prior
         self.succ = np.full(K, prior)       # EWMA accepted Bernoulli trials
         self.trials = np.ones(K)            # EWMA total Bernoulli trials
         self.decay = decay
+
+    def extend(self, n: int):
+        """Open EWMA slots for ``n`` devices joining the cell."""
+        self.succ = np.concatenate([self.succ, np.full(n, self.prior)])
+        self.trials = np.concatenate([self.trials, np.ones(n)])
+
+    def keep(self, keep_mask: np.ndarray):
+        """Drop EWMA slots of devices leaving the cell."""
+        keep_mask = np.asarray(keep_mask, dtype=bool)
+        self.succ = self.succ[keep_mask]
+        self.trials = self.trials[keep_mask]
 
     @property
     def alpha_hat(self) -> np.ndarray:
@@ -91,14 +85,27 @@ class AcceptanceEstimator:
         self.succ = np.asarray(value, dtype=np.float64).copy()
         self.trials = np.ones_like(self.succ)
 
-    def update(self, accept_counts: np.ndarray, lengths: np.ndarray):
+    def update(self, accept_counts: np.ndarray, lengths: np.ndarray,
+               mask: np.ndarray | None = None):
         """Each accepted draft token is a Bernoulli success; the (at most one)
         rejection is a failure.  EWMA of successes and trials separately —
         the ratio-of-sums estimator is consistent for the truncated
-        geometric, unlike the per-round mean of ratios."""
+        geometric, unlike the per-round mean of ratios.
+
+        ``mask`` selects the devices that actually participated in the round:
+        a deadline-dropped device reports accepted=0, which is NOT a run of
+        rejections, so its EWMA state must be left untouched.
+        """
         counts = np.asarray(accept_counts, dtype=np.float64)
         lengths = np.maximum(np.asarray(lengths, dtype=np.float64), 1.0)
         rejected = (counts < lengths).astype(np.float64)
-        self.succ = self.decay * self.succ + (1 - self.decay) * counts
-        self.trials = self.decay * self.trials + (1 - self.decay) * (counts + rejected)
+        new_succ = self.decay * self.succ + (1 - self.decay) * counts
+        new_trials = (self.decay * self.trials
+                      + (1 - self.decay) * (counts + rejected))
+        if mask is None:
+            mask = np.ones_like(counts, dtype=bool)
+        else:
+            mask = np.asarray(mask, dtype=bool)
+        self.succ = np.where(mask, new_succ, self.succ)
+        self.trials = np.where(mask, new_trials, self.trials)
         return self.alpha_hat

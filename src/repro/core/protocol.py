@@ -1,16 +1,16 @@
-"""The Multi-SPIN round protocol (paper Sec. III-A, Fig. 2).
+"""Legacy entry point for the Multi-SPIN round protocol.
 
-``MultiSpinProtocol.run_round`` executes steps 1-5 with full latency
-bookkeeping.  Two compute backends:
+DEPRECATED — ``MultiSpinProtocol`` is now a thin compatibility shim over
+``repro.serving.cell.MultiSpinCell``, kept for one PR so downstream code
+can migrate.  New code should construct the system through
+``repro.api``::
 
-  * synthetic — acceptance outcomes drawn Bernoulli(alpha_k) (paper's
-    analytic regime; used for the large-scale sweeps of Figs. 6-8);
-  * engine    — a ``repro.serving.spec_engine.SpecEngine`` running real JAX
-    models (used for Fig. 3 empirical curves and integration tests).
+    from repro.api import CellConfig, MultiSpinCell, Request
 
-Fault-tolerance hooks: device dropout (a device missing its deadline is
-skipped this round and its tokens carried over), controller re-planning on
-churn, and round-state checkpointing live here as first-class features.
+The cell owns the controller, channel, estimator, and round scheduler and
+re-plans on device join/leave; the verification compute (synthetic
+Bernoulli vs real JAX engine) is a pluggable backend
+(``repro.serving.backends``) instead of an ``if self.engine`` fork.
 """
 
 from __future__ import annotations
@@ -19,9 +19,14 @@ import dataclasses
 
 import numpy as np
 
-from .channel import ChannelConfig, ChannelState
-from .controller import AcceptanceEstimator, MultiSpinController
-from .goodput import expected_accepted_tokens
+from repro.serving.backends import EngineBackend, SyntheticBackend
+from repro.serving.cell import CellConfig, MultiSpinCell, RoundRecord  # noqa: F401 (re-export)
+from repro.serving.scheduler import Request
+
+from .channel import ChannelConfig
+from .controller import MultiSpinController
+
+_NEVER_RETIRE = 10 ** 12   # shim devices are persistent, not finite requests
 
 
 @dataclasses.dataclass
@@ -33,20 +38,14 @@ class DeviceProfile:
     task: str = ""
 
 
-@dataclasses.dataclass
-class RoundRecord:
-    lengths: np.ndarray
-    bandwidth: np.ndarray
-    accepted: np.ndarray          # realized accepted tokens (incl. bonus)
-    t_ma: float
-    t_ver: float
-    t_round: float
-    predicted_goodput: float
-    realized_goodput: float
-    active: np.ndarray            # device participation mask
-
-
 class MultiSpinProtocol:
+    """Compatibility shim: a fixed-device view of ``MultiSpinCell``.
+
+    Construction submits one never-retiring request per device, so round
+    semantics (including rng draw order in the synthetic regime) are
+    identical to the pre-cell implementation.
+    """
+
     def __init__(self, controller: MultiSpinController,
                  channel_cfg: ChannelConfig,
                  devices: list[DeviceProfile],
@@ -59,167 +58,133 @@ class MultiSpinProtocol:
         self.channel_cfg = channel_cfg
         self.devices = devices
         self.rng = rng
-        self.engine = engine
-        self.engine_state = engine_state
-        self.estimator = AcceptanceEstimator(len(devices)) if use_estimator else None
-        self.deadline_factor = deadline_factor
-        self.channel = ChannelState.sample(channel_cfg, len(devices), rng)
-        self.history: list[RoundRecord] = []
-        self._round_idx = 0
+        cfg = CellConfig(
+            scheme=controller.scheme, channel=channel_cfg,
+            t_ver_fix=controller.t_ver_model.t_fix,
+            t_ver_lin=controller.t_ver_model.t_lin,
+            L_max=controller.L_max, L_fixed=controller.L_fixed,
+            n_phi=controller.n_phi, n_lam=controller.n_lam,
+            max_batch=len(devices), use_estimator=use_estimator,
+            deadline_factor=deadline_factor)
+        backend = (EngineBackend(engine, engine_state)
+                   if engine is not None else SyntheticBackend())
+        self.cell = MultiSpinCell(cfg, backend=backend, rng=rng)
+        # honor the caller's controller instance verbatim (it may carry
+        # custom hyper-parameters the config round-trip would rebuild)
+        self.cell.controller = controller
+        for i, d in enumerate(devices):
+            self.cell.submit(Request(rid=i, prompt_len=0,
+                                     max_new_tokens=_NEVER_RETIRE,
+                                     alpha=d.alpha, T_S=d.T_S, task=d.task))
+        self.cell.admit()
 
     # ------------------------------------------------------------------
 
     @property
+    def engine(self):
+        b = self.cell.backend
+        return b.engine if isinstance(b, EngineBackend) else None
+
+    @property
+    def engine_state(self):
+        b = self.cell.backend
+        return b.state if isinstance(b, EngineBackend) else None
+
+    @property
+    def estimator(self):
+        return self.cell.estimator
+
+    @property
+    def channel(self):
+        return self.cell.channel
+
+    @property
+    def history(self) -> list[RoundRecord]:
+        return self.cell.history
+
+    @property
+    def _round_idx(self) -> int:
+        return self.cell._round_idx
+
+    @property
     def alphas(self) -> np.ndarray:
-        if self.estimator is not None:
-            return self.estimator.alpha_hat
-        return np.array([d.alpha for d in self.devices])
+        return self.cell.planning_alphas(self.cell.scheduler.active)
 
     @property
     def t_slm(self) -> np.ndarray:
-        return np.array([d.T_S for d in self.devices])
+        return np.array([r.T_S for r in self.cell.scheduler.active])
+
+    # ------------------------------------------------------------------
 
     def run_round(self, key=None) -> RoundRecord:
-        K = len(self.devices)
-        # --- step 1: system configuration ---
-        self.channel = self.channel.refade(self.rng)       # block fading
-        plan = self.controller.plan(self.alphas, self.t_slm, self.channel.rates)
-        lengths = np.asarray(plan.lengths, dtype=np.int64)
-        bandwidth = np.asarray(plan.bandwidth, dtype=np.float64)
-
-        # --- steps 2-3: drafting + upload latency (straggler-limited) ---
-        per_dev_lat = lengths * (self.t_slm + self.controller.q_tok_bits
-                                 / np.maximum(bandwidth * self.channel.rates, 1e-9))
-        active = np.ones(K, dtype=bool)
-        if self.deadline_factor is not None:
-            # straggler mitigation: devices missing deadline_factor x median
-            # latency are dropped from this round's batch
-            deadline = self.deadline_factor * np.median(per_dev_lat)
-            active = per_dev_lat <= deadline
-            if not active.any():
-                active[:] = True
-        t_ma = float(np.max(per_dev_lat[active]))
-
-        # --- step 4: batched verification ---
-        K_active = int(active.sum())
-        t_ver = float(plan.meta.get("t_ver",
-                                    self.controller.t_ver_model(K_active)))
-        if self.engine is not None:
-            import jax
-            key = jax.random.PRNGKey(self.rng.integers(2 ** 31)) if key is None else key
-            self.engine_state, res, _ = self.engine.spin_round(
-                self.engine_state, lengths, key)
-            accepted = np.asarray(res.output_len, dtype=np.int64)
-            accepted = np.where(active, accepted, 0)
-        else:
-            # synthetic verification: Bernoulli draws from the TRUE device
-            # alphas (the estimator, when enabled, only informs planning)
-            true_alpha = np.array([d.alpha for d in self.devices])
-            u = self.rng.random((K, int(lengths.max())))
-            pos_ok = np.arange(int(lengths.max()))[None, :] < lengths[:, None]
-            acc = (u < true_alpha[:, None]) & pos_ok
-            n = np.sum(np.cumprod(acc, axis=1), axis=1)
-            accepted = np.where(active, n + 1, 0)
-
-        # --- step 5: feedback / estimator update ---
-        if self.estimator is not None:
-            self.estimator.update(np.maximum(accepted - 1, 0), lengths)
-
-        t_round = t_ma + t_ver
-        rec = RoundRecord(
-            lengths=lengths, bandwidth=bandwidth, accepted=accepted,
-            t_ma=t_ma, t_ver=t_ver, t_round=t_round,
-            predicted_goodput=plan.goodput,
-            realized_goodput=float(np.sum(accepted) / t_round),
-            active=active,
-        )
-        self.history.append(rec)
-        self._round_idx += 1
-        return rec
+        return self.cell.step(key=key)
 
     def run(self, n_rounds: int) -> dict:
         for _ in range(n_rounds):
             self.run_round()
         return self.summary()
 
-    # ------------------------------------------------------------------
-    # Beyond-paper: pipelined half-batch schedule (core.beyond). While half
-    # A drafts+uploads, the server verifies half B; wall-clock per half-round
-    # is max(T_ma(current half), T_ver(other half)).
-    # ------------------------------------------------------------------
-
     def run_pipelined(self, n_rounds: int) -> dict:
-        K = len(self.devices)
-        idx = np.argsort([d.alpha for d in self.devices])
-        halves = [list(idx[0::2]), list(idx[1::2])]
-        total_tokens, total_time = 0.0, 0.0
-        pending_ver: float | None = None   # T_ver of the half now verifying
-        for i in range(n_rounds):
-            h = halves[i % 2]
-            self.channel = self.channel.refade(self.rng)
-            alphas = self.alphas[h]
-            t_slm = self.t_slm[h]
-            rates = self.channel.rates[h]
-            plan = self.controller.plan(alphas, t_slm, rates)
-            lengths = np.asarray(plan.lengths, dtype=np.int64)
-            per_dev = lengths * (t_slm + self.controller.q_tok_bits
-                                 / np.maximum(np.asarray(plan.bandwidth)
-                                              * rates, 1e-9))
-            t_ma = float(np.max(per_dev))
-            # overlap with the other half's verification
-            step_time = max(t_ma, pending_ver or 0.0)
-            t_ver = float(plan.meta.get(
-                "t_ver", self.controller.t_ver_model(len(h))))
-            pending_ver = t_ver
-            true_alpha = np.array([self.devices[j].alpha for j in h])
-            u = self.rng.random((len(h), int(lengths.max())))
-            ok = np.arange(int(lengths.max()))[None, :] < lengths[:, None]
-            acc = (u < true_alpha[:, None]) & ok
-            n = np.sum(np.cumprod(acc, axis=1), axis=1) + 1
-            total_tokens += float(np.sum(n))
-            total_time += step_time
-        total_time += pending_ver or 0.0   # drain the pipe
-        return {"rounds": n_rounds, "tokens": total_tokens,
-                "seconds": total_time,
-                "goodput": total_tokens / total_time if total_time else 0.0}
+        """Pipelined half-batch schedule (see ``MultiSpinCell`` docs); now a
+        schedule option of the cell rather than a synthetic-only fork.  As in
+        the legacy implementation the call is fully self-contained: it starts
+        with an empty pipe and halves parity 0, returns accounting for only
+        this call's rounds (plus the trailing drain), and leaves ``history``
+        / ``summary()`` / ``state_dict()`` untouched."""
+        prev = self.cell.config.schedule
+        mark = len(self.cell.history)
+        est = self.cell.estimator
+        sched = self.cell.scheduler
+        # legacy planned every half-round with the alpha_hat frozen at call
+        # entry and never fed outcomes back; silence updates for the call
+        if est is not None:
+            _est_update, est.update = est.update, lambda *a, **k: None
+        snap = (sched.clock, dataclasses.replace(sched.stats),
+                [(r, r.generated, r.rounds) for r in sched.active])
+        self.cell._pipe_parity = 0
+        self.cell.config.schedule = "pipelined"
+        try:
+            for _ in range(n_rounds):
+                self.cell.step()
+            recs = list(self.cell.history[mark:])
+            tokens = float(sum(np.sum(r.accepted) for r in recs))
+            seconds = (float(sum(r.t_round for r in recs))
+                       + self.cell._pending_ver)
+        finally:
+            # legacy kept local accounting only — even on a mid-run failure,
+            # drop this call's records and scheduler bookkeeping so sync-round
+            # summary()/round_idx/state_dict semantics are preserved, and
+            # clear the pipe (its drain is billed here, not in the summary)
+            self.cell.config.schedule = prev
+            if est is not None:
+                est.update = _est_update
+            n_piped = len(self.cell.history) - mark
+            del self.cell.history[mark:]
+            self.cell._round_idx -= n_piped
+            self.cell._pending_ver = 0.0
+            self.cell._pending_rids = set()
+            sched.clock, sched.stats = snap[0], snap[1]
+            for r, generated, rounds in snap[2]:
+                r.generated, r.rounds = generated, rounds
+        return {"rounds": len(recs), "tokens": tokens, "seconds": seconds,
+                "goodput": tokens / seconds if seconds else 0.0}
 
     def summary(self) -> dict:
-        total_tokens = float(sum(np.sum(r.accepted) for r in self.history))
-        total_time = float(sum(r.t_round for r in self.history))
-        return {
-            "rounds": len(self.history),
-            "tokens": total_tokens,
-            "seconds": total_time,
-            "goodput": total_tokens / total_time if total_time else 0.0,
-            "mean_predicted_goodput": float(np.mean(
-                [r.predicted_goodput for r in self.history])),
-        }
+        return self.cell.summary()
 
-    # ------------------------------------------------------------------
-    # Fault tolerance: round-state checkpoint/restore (serving pods restart
-    # mid-conversation without losing protocol state).
     # ------------------------------------------------------------------
 
     def state_dict(self) -> dict:
-        return {
-            "round_idx": self._round_idx,
-            "avg_gains": self.channel.avg_gains,
-            "alpha_hat": (self.estimator.alpha_hat
-                          if self.estimator is not None else None),
-        }
+        return self.cell.state_dict()
 
     def load_state_dict(self, state: dict):
-        self._round_idx = state["round_idx"]
-        self.channel = ChannelState.sample(self.channel_cfg, len(self.devices),
-                                           self.rng, avg_gains=state["avg_gains"])
-        if state.get("alpha_hat") is not None and self.estimator is not None:
-            self.estimator.alpha_hat = state["alpha_hat"]
+        self.cell.load_state_dict(state)
 
     def drop_device(self, k: int):
         """Permanent device failure: re-plan for the survivors (elastic)."""
+        rid = self.cell.scheduler.active[k].rid
         del self.devices[k]
-        self.channel = ChannelState.sample(
-            self.channel_cfg, len(self.devices), self.rng,
-            avg_gains=np.delete(self.channel.avg_gains, k))
-        if self.estimator is not None:
-            self.estimator.alpha_hat = np.delete(self.estimator.alpha_hat, k)
+        self.cell.leave(rid)
+        # legacy resampled the survivors' fading block on drop (consuming
+        # K-1 exponential draws); replicate for seeded-run reproducibility
+        self.cell._refade()

@@ -1,0 +1,112 @@
+"""Draft-control scheme registry.
+
+Every multi-access draft-control scheme the controller can run is registered
+here under a stable name via ``@register_scheme``.  The CLI, benchmarks, and
+docs enumerate ``available_schemes()`` instead of hard-coding choice lists,
+so adding a scheme is a single decorated function — nothing else can drift.
+
+A solver receives the owning ``MultiSpinController`` (for the latency model
+and search hyper-parameters) plus the per-round cell observation
+(acceptance estimates, device compute speeds, channel spectrum
+efficiencies) and returns a ``DraftControlSolution``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Protocol
+
+import numpy as np
+
+from .draft_control import (
+    DraftControlSolution,
+    solve_fixed,
+    solve_heterogeneous,
+    solve_homogeneous_exhaustive,
+    solve_uniform_bandwidth,
+)
+
+
+class SchemeSolver(Protocol):
+    def __call__(self, controller, alphas: np.ndarray, T_S: np.ndarray,
+                 rates: np.ndarray) -> DraftControlSolution: ...
+
+
+_REGISTRY: dict[str, SchemeSolver] = {}
+
+
+def register_scheme(name: str) -> Callable[[SchemeSolver], SchemeSolver]:
+    """Register ``fn`` as the solver for scheme ``name``."""
+
+    def deco(fn: SchemeSolver) -> SchemeSolver:
+        if name in _REGISTRY:
+            raise ValueError(f"scheme {name!r} already registered")
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_scheme(name: str) -> SchemeSolver:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scheme {name!r}; available: "
+                       f"{', '.join(available_schemes())}") from None
+
+
+def available_schemes() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Paper schemes (Sec. IV/V) + baselines (Sec. VI-A4)
+# ---------------------------------------------------------------------------
+
+def _common_kw(controller, T_S, rates) -> dict:
+    return dict(T_S=T_S, r=rates, Q_tok=controller.q_tok_bits,
+                B=controller.bandwidth_hz)
+
+
+@register_scheme("hete")
+def _solve_hete(controller, alphas, T_S, rates) -> DraftControlSolution:
+    """Algorithm 1: joint heterogeneous lengths + bandwidth."""
+    return solve_heterogeneous(
+        alphas, T_ver=controller.t_ver_model(len(alphas)),
+        L_max=controller.L_max, n_phi=controller.n_phi,
+        n_lam=controller.n_lam, **_common_kw(controller, T_S, rates))
+
+
+@register_scheme("hete-packed")
+def _solve_hete_packed(controller, alphas, T_S, rates) -> DraftControlSolution:
+    """Beyond-paper: heterogeneous lengths under ragged packed verification."""
+    from .beyond import TokenBudgetVerifier, solve_heterogeneous_packed
+    verifier = TokenBudgetVerifier.from_affine(
+        controller.t_ver_model.t_fix, controller.t_ver_model.t_lin)
+    return solve_heterogeneous_packed(
+        alphas, verifier=verifier, L_max=controller.L_max,
+        n_phi=controller.n_phi, n_lam=controller.n_lam,
+        **_common_kw(controller, T_S, rates))
+
+
+@register_scheme("homo")
+def _solve_homo(controller, alphas, T_S, rates) -> DraftControlSolution:
+    """Homo-Multi-SPIN: optimal uniform length, Lemma-1 bandwidth."""
+    return solve_homogeneous_exhaustive(
+        alphas, T_ver=controller.t_ver_model(len(alphas)),
+        L_max=controller.L_max, **_common_kw(controller, T_S, rates))
+
+
+@register_scheme("uni-bw")
+def _solve_uni_bw(controller, alphas, T_S, rates) -> DraftControlSolution:
+    """Uni-BW Multi-SPIN: heterogeneous lengths under B_k = B/K."""
+    return solve_uniform_bandwidth(
+        alphas, T_ver=controller.t_ver_model(len(alphas)),
+        L_max=controller.L_max, **_common_kw(controller, T_S, rates))
+
+
+@register_scheme("fixed")
+def _solve_fixed(controller, alphas, T_S, rates) -> DraftControlSolution:
+    """Fixed BW&L baseline: L_k = L_fixed, B_k = B/K."""
+    return solve_fixed(
+        alphas, T_ver=controller.t_ver_model(len(alphas)),
+        L_fixed=controller.L_fixed, **_common_kw(controller, T_S, rates))

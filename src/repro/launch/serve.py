@@ -3,14 +3,19 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
       --devices 4 --rounds 6 --scheme hete
 
-Runs the full protocol (controller + channel + real-model engine) with the
-request scheduler keeping the verification batch full.  --dry-run lowers the
+Stands up a ``MultiSpinCell`` (controller + channel + scheduler) with a
+real-model ``EngineBackend`` and drives the session loop; the scheduler
+keeps the verification batch full and retires finished requests.  Scheme
+choices are enumerated from the scheme registry.  --dry-run lowers the
 serve_step under the production mesh instead.
 """
 
 from __future__ import annotations
 
 import argparse
+
+from repro.core.schemes import available_schemes
+from repro.serving.cell import SCHEDULES
 
 
 def main():
@@ -22,8 +27,8 @@ def main():
     ap.add_argument("--shape", default="decode_32k")
     ap.add_argument("--devices", type=int, default=4)
     ap.add_argument("--rounds", type=int, default=6)
-    ap.add_argument("--scheme", default="hete",
-                    choices=["hete", "homo", "uni-bw", "fixed"])
+    ap.add_argument("--scheme", default="hete", choices=available_schemes())
+    ap.add_argument("--schedule", default="sync", choices=SCHEDULES)
     ap.add_argument("--max-new-tokens", type=int, default=32)
     args = ap.parse_args()
 
@@ -36,12 +41,15 @@ def main():
     import jax
     import numpy as np
 
+    from repro.api import (
+        CellConfig,
+        ChannelConfig,
+        EngineBackend,
+        MultiSpinCell,
+        Request,
+        SpecEngine,
+    )
     from repro.configs import get_config
-    from repro.core.channel import ChannelConfig
-    from repro.core.controller import MultiSpinController, VerificationLatencyModel
-    from repro.core.protocol import DeviceProfile, MultiSpinProtocol
-    from repro.serving import SpecEngine
-    from repro.serving.scheduler import Request, RoundScheduler
 
     rng = np.random.default_rng(0)
     tcfg = get_config(args.arch)
@@ -54,38 +62,29 @@ def main():
     engine.init_params(jax.random.PRNGKey(0))
 
     K = args.devices
-    sched = RoundScheduler(max_batch=K)
-    for i in range(K):
-        sched.submit(Request(rid=i, prompt_len=8,
-                             max_new_tokens=args.max_new_tokens,
-                             alpha=float(rng.choice([0.71, 0.74, 0.86])),
-                             T_S=0.009 * float(rng.uniform(0.85, 1.15))))
-    sched.admit()
-
     prompts = jax.random.randint(jax.random.PRNGKey(1), (K, 8), 0,
                                  tcfg.vocab_size)
-    state = engine.start(prompts)
+    backend = EngineBackend(engine, engine.start(prompts))
 
-    channel = ChannelConfig(vocab_size=tcfg.vocab_size)
-    ctrl = MultiSpinController(
-        scheme=args.scheme, q_tok_bits=channel.q_tok_bits,
-        bandwidth_hz=channel.total_bandwidth_hz,
-        t_ver_model=VerificationLatencyModel(0.035, 0.0177), L_max=8)
-    alphas, t_s = sched.device_profiles()
-    devices = [DeviceProfile(T_S=float(t), alpha=float(a))
-               for a, t in zip(alphas, t_s)]
-    proto = MultiSpinProtocol(ctrl, channel, devices, rng, engine=engine,
-                              engine_state=state)
+    cfg = CellConfig(
+        scheme=args.scheme, schedule=args.schedule,
+        channel=ChannelConfig(vocab_size=tcfg.vocab_size),
+        t_ver_fix=0.035, t_ver_lin=0.0177, L_max=8, max_batch=K)
+    cell = MultiSpinCell(cfg, backend=backend, rng=rng)
+    for i in range(K):
+        cell.submit(Request(rid=i, prompt_len=8,
+                            max_new_tokens=args.max_new_tokens,
+                            alpha=float(rng.choice([0.71, 0.74, 0.86])),
+                            T_S=0.009 * float(rng.uniform(0.85, 1.15))))
 
     for i in range(args.rounds):
-        rec = proto.run_round()
-        sched.complete_round(rec.accepted, rec.t_round)
+        rec = cell.step()
+        if rec is None:
+            break
         print(f"round {i}: L={rec.lengths} accepted={rec.accepted} "
               f"goodput={rec.realized_goodput:.1f} tok/s "
-              f"active={len(sched.active)}")
-        if sched.idle:
-            break
-    s = sched.stats
+              f"active={len(cell.scheduler.active)}")
+    s = cell.scheduler.stats
     print(f"\ncompleted={s.completed} tokens={s.total_tokens} "
           f"goodput={s.goodput:.1f} tok/s over {s.wall_time:.2f}s simulated")
 

@@ -1,3 +1,24 @@
-"""Serving runtime: speculative engine, cache utilities, scheduler."""
+"""Serving runtime: Multi-SPIN cell, verification backends, speculative
+engine, cache utilities, scheduler.
 
-from .spec_engine import SpecEngine, StreamState  # noqa: F401
+``SpecEngine``/``StreamState`` import jax and are resolved lazily so the
+analytic serving path (cell + synthetic backend) stays importable in
+milliseconds on any host.
+"""
+
+from .backends import EngineBackend, SyntheticBackend, VerificationBackend  # noqa: F401
+from .cell import CellConfig, MultiSpinCell, RoundRecord  # noqa: F401
+from .scheduler import Request, RoundScheduler, SchedulerStats  # noqa: F401
+
+_LAZY = ("SpecEngine", "StreamState")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from . import spec_engine
+        return getattr(spec_engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

@@ -1,0 +1,123 @@
+"""Pluggable verification backends for the Multi-SPIN cell (protocol step 4).
+
+The round loop is backend-agnostic: planning, latency bookkeeping, deadline
+masking, and estimator feedback live in ``MultiSpinCell``; only the
+draft-then-verify compute differs between
+
+  * ``SyntheticBackend`` — acceptance outcomes drawn Bernoulli(alpha_k)
+    (the paper's analytic regime; used for the large-scale sweeps of
+    Figs. 6-8 and every benchmark);
+  * ``EngineBackend``    — a real JAX ``SpecEngine`` drafting and
+    batch-verifying on model weights (Fig. 3 empirical curves, serving).
+
+Benchmarks and tests swap compute by passing a different backend — protocol
+code is untouched.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class VerificationBackend(Protocol):
+    """One Multi-SPIN verification step for the cell's active set.
+
+    ``verify`` receives the planned draft lengths (one per active request,
+    in scheduler order) and returns the realized accepted token counts
+    INCLUDING the bonus token, i.e. values in [1, L_k + 1].  ``mask``
+    (when given, aligned with ``requests``) marks deadline-dropped devices
+    False: the caller zeroes their accepted counts, and stateful backends
+    must not advance their streams; stateless backends may ignore it.
+    """
+
+    def verify(self, lengths: np.ndarray, requests: Sequence,
+               rng: np.random.Generator, key=None,
+               mask: np.ndarray | None = None) -> np.ndarray: ...
+
+
+class SyntheticBackend:
+    """Bernoulli(alpha) acceptance draws from the requests' true task
+    acceptance rates (``Request.alpha``).  The estimator, when enabled,
+    only informs planning — draws always use the true rates.  ``mask`` is
+    ignored: draws are stateless, and drawing the full set preserves the
+    legacy protocol's exact rng stream under deadline masking."""
+
+    def verify(self, lengths: np.ndarray, requests: Sequence,
+               rng: np.random.Generator, key=None,
+               mask: np.ndarray | None = None) -> np.ndarray:
+        lengths = np.asarray(lengths, dtype=np.int64)
+        K = len(lengths)
+        true_alpha = np.array([r.alpha for r in requests])
+        u = rng.random((K, int(lengths.max())))
+        pos_ok = np.arange(int(lengths.max()))[None, :] < lengths[:, None]
+        acc = (u < true_alpha[:, None]) & pos_ok
+        n = np.sum(np.cumprod(acc, axis=1), axis=1)
+        return n + 1
+
+
+class EngineBackend:
+    """Real-model verification through a ``repro.serving.SpecEngine``.
+
+    The engine batch is fixed at ``start()`` time (B streams); the backend
+    maps request ids onto engine rows in admission order (the cell calls
+    ``bind`` as requests are admitted, matching ``start()`` prompt order;
+    unbound requests fall back to first-seen order).  Rows whose
+    request is not in this call's active set (retired, or the off half of a
+    pipelined schedule) ride through the batched forward frozen: they
+    commit nothing and their positions do not advance, so engine stream
+    content always matches the cell's per-request accounting.
+    """
+
+    def __init__(self, engine, state, vhat: int = 64):
+        self.engine = engine
+        self.state = state
+        self.vhat = vhat
+        self._row_of: dict[int, int] = {}
+
+    @property
+    def batch_size(self) -> int:
+        return int(self.state.pending.shape[0])
+
+    def bind(self, requests: Sequence) -> None:
+        """Pre-register engine rows for ``requests`` in admission order.
+
+        The cell calls this as devices join, so row assignment always
+        follows ``engine.start()`` prompt order — even when the first
+        ``verify`` call only sees a reordered subset of the batch (the
+        pipelined schedule verifies alpha-sorted half-batches)."""
+        for r in requests:
+            self._row(r)
+
+    def _row(self, r) -> int:
+        if r.rid not in self._row_of:
+            nxt = len(self._row_of)
+            if nxt >= self.batch_size:
+                raise ValueError(
+                    f"engine batch exhausted: {self.batch_size} streams, "
+                    f"cannot map new request rid={r.rid}")
+            self._row_of[r.rid] = nxt
+        return self._row_of[r.rid]
+
+    def verify(self, lengths: np.ndarray, requests: Sequence,
+               rng: np.random.Generator, key=None,
+               mask: np.ndarray | None = None) -> np.ndarray:
+        import jax
+
+        lengths = np.asarray(lengths, dtype=np.int64)
+        rows = [self._row(r) for r in requests]
+        full = np.ones(self.batch_size, dtype=np.int64)
+        full[rows] = lengths
+        freeze = np.ones(self.batch_size, dtype=bool)
+        freeze[rows] = False
+        if mask is not None:
+            # deadline-dropped devices report nothing this round: their
+            # engine streams must not advance with discarded tokens
+            freeze[np.asarray(rows)[~np.asarray(mask, dtype=bool)]] = True
+        if key is None:
+            key = jax.random.PRNGKey(int(rng.integers(2 ** 31)))
+        self.state, res, _ = self.engine.spin_round(
+            self.state, full, key, vhat=self.vhat, freeze=freeze)
+        return np.asarray(res.output_len, dtype=np.int64)[rows]

@@ -1,0 +1,461 @@
+"""The Multi-SPIN cell: one session object for the whole serving stack.
+
+``MultiSpinCell`` owns the paper's full loop (Sec. III-A, Fig. 2) — plan,
+draft, upload, batch-verify, feedback — plus the request lifecycle around
+it: admission from a queue, per-request channel state, online acceptance
+estimation, deadline-based straggler masking, retirement, and device
+join/leave with automatic re-planning.  Compute is pluggable through
+``repro.serving.backends`` (synthetic Bernoulli draws or a real JAX
+``SpecEngine``), and the round schedule is selectable (``sync`` — the
+paper's synchronized rounds — or ``pipelined`` — half-batches overlapping
+draft/upload with verification, backend-agnostic).
+
+Construction is one ``CellConfig`` (JSON-serializable) and one call::
+
+    cfg = CellConfig(scheme="hete", max_batch=8)
+    cell = MultiSpinCell(cfg)
+    cell.submit(Request(rid=0, prompt_len=8, max_new_tokens=64,
+                        alpha=0.8, T_S=0.009))
+    rec = cell.step()          # one protocol round
+    print(cell.summary())
+
+Unlike the legacy ``MultiSpinProtocol`` (now a shim over this class), the
+device list is never frozen: every round plans against the scheduler's
+CURRENT active set, so retirements, joins, and drops can never diverge
+from the controller's view.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.core.channel import (
+    ChannelConfig,
+    ChannelState,
+    sample_average_gains,
+    sample_rayleigh_gains,
+    spectrum_efficiency,
+)
+from repro.core.controller import (
+    AcceptanceEstimator,
+    MultiSpinController,
+    VerificationLatencyModel,
+)
+from repro.core.schemes import available_schemes
+from repro.serving.backends import SyntheticBackend, VerificationBackend
+from repro.serving.scheduler import Request, RoundScheduler
+
+SCHEDULES = ("sync", "pipelined")
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """Full bookkeeping of one executed round (sync or pipelined half)."""
+
+    lengths: np.ndarray
+    bandwidth: np.ndarray
+    accepted: np.ndarray          # realized accepted tokens (incl. bonus)
+    t_ma: float
+    t_ver: float
+    t_round: float
+    predicted_goodput: float
+    realized_goodput: float
+    active: np.ndarray            # device participation mask
+    rids: np.ndarray | None = None  # request ids, scheduler order
+
+
+@dataclasses.dataclass
+class CellConfig:
+    """Everything needed to stand up a Multi-SPIN cell, in one JSON-able
+    record: scheme + controller search settings, wireless channel, the
+    verification latency model, scheduler capacity, and lifecycle knobs."""
+
+    scheme: str = "hete"
+    channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
+    t_ver_fix: float = 0.035              # T_ver(K) = t_fix + K t_lin (eq. 7)
+    t_ver_lin: float = 0.0177
+    L_max: int = 25
+    L_fixed: int = 8
+    n_phi: int = 40
+    n_lam: int = 40
+    max_batch: int = 8
+    use_estimator: bool = False
+    deadline_factor: float | None = None  # straggler deadline x median latency
+    schedule: str = "sync"                # "sync" | "pipelined"
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.scheme not in available_schemes():
+            raise ValueError(f"unknown scheme {self.scheme!r}; available: "
+                             f"{', '.join(available_schemes())}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"schedule must be one of {SCHEDULES}, "
+                             f"got {self.schedule!r}")
+
+    # -- serialization ---------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CellConfig":
+        d = dict(d)
+        if isinstance(d.get("channel"), dict):
+            d["channel"] = ChannelConfig(**d["channel"])
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "CellConfig":
+        return cls.from_dict(json.loads(s))
+
+    # -- factories -------------------------------------------------------
+
+    def build_controller(self) -> MultiSpinController:
+        return MultiSpinController(
+            scheme=self.scheme, q_tok_bits=self.channel.q_tok_bits,
+            bandwidth_hz=self.channel.total_bandwidth_hz,
+            t_ver_model=VerificationLatencyModel(self.t_ver_fix,
+                                                 self.t_ver_lin),
+            L_max=self.L_max, L_fixed=self.L_fixed,
+            n_phi=self.n_phi, n_lam=self.n_lam)
+
+
+class MultiSpinCell:
+    """Session object running the Multi-SPIN protocol over a live request
+    set with a pluggable verification backend."""
+
+    def __init__(self, config: CellConfig,
+                 backend: VerificationBackend | None = None,
+                 rng: np.random.Generator | None = None):
+        self.config = config
+        self.rng = rng if rng is not None else np.random.default_rng(config.seed)
+        self.controller = config.build_controller()
+        self.backend = backend if backend is not None else SyntheticBackend()
+        self.scheduler = RoundScheduler(max_batch=config.max_batch)
+        self.estimator = (AcceptanceEstimator(0) if config.use_estimator
+                          else None)
+        # Per-request channel state, row-aligned with scheduler.active.
+        # Kept as explicit arrays (not one ChannelState) so rows can be
+        # spliced on join/leave without redrawing surviving devices' fading
+        # — which also preserves the legacy protocol's exact draw order.
+        self.avg_gains = np.zeros(0)
+        self.gains = np.zeros(0)
+        self.rates = np.zeros(0)
+        self.history: list[RoundRecord] = []
+        self._round_idx = 0
+        self._pending_ver = 0.0      # pipelined: verification still in flight
+        self._pending_rids: set[int] = set()   # whose tokens it verifies
+        self._drained_ver = 0.0      # pipelined: trailing ver already drained
+        self._pipe_parity = 0
+
+    # ------------------------------------------------------------------
+    # request lifecycle
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        """Queue a request (device asking to join the cell)."""
+        self.scheduler.submit(req)
+        return req.rid
+
+    def admit(self) -> list[Request]:
+        """Fill free batch slots; provision channel + estimator rows for the
+        devices that just joined.  Called automatically by ``step``."""
+        # config.max_batch is the single source of truth for capacity (it can
+        # be resized at runtime); the scheduler just mirrors it
+        self.scheduler.max_batch = self.config.max_batch
+        before = len(self.scheduler.active)
+        active = self.scheduler.admit()
+        n_new = len(active) - before
+        if n_new:
+            new_avg = sample_average_gains(self.config.channel, n_new, self.rng)
+            self.avg_gains = np.concatenate([self.avg_gains, new_avg])
+            self.gains = np.concatenate(
+                [self.gains, sample_rayleigh_gains(new_avg, self.rng)])
+            self.rates = spectrum_efficiency(self.config.channel, self.gains)
+            if self.estimator is not None:
+                self.estimator.extend(n_new)
+            bind = getattr(self.backend, "bind", None)
+            if bind is not None:
+                bind(active[before:])
+        return active
+
+    def leave(self, rid: int) -> Request:
+        """Permanent device failure / disconnect: drop the request and its
+        channel + estimator rows; the next round re-plans for survivors."""
+        idx = next((i for i, r in enumerate(self.scheduler.active)
+                    if r.rid == rid), None)
+        if idx is None:
+            raise KeyError(f"rid {rid} not in the active set")
+        req = self.scheduler.active.pop(idx)
+        req.done = True
+        keep = np.ones(len(self.scheduler.active) + 1, dtype=bool)
+        keep[idx] = False
+        self._drop_rows(keep)
+        return req
+
+    def _drop_rows(self, keep: np.ndarray):
+        """Splice out the channel + estimator rows of departing devices."""
+        self.avg_gains = self.avg_gains[keep]
+        self.gains = self.gains[keep]
+        self.rates = self.rates[keep]
+        if self.estimator is not None:
+            self.estimator.keep(keep)
+
+    def _retire(self, active_reqs: list[Request], accepted: np.ndarray,
+                round_time: float, participated: np.ndarray | None = None):
+        self.scheduler.complete_round(accepted, round_time,
+                                      participated=participated)
+        keep = np.array([not r.done for r in active_reqs], dtype=bool)
+        if not keep.all():
+            self._drop_rows(keep)
+
+    # ------------------------------------------------------------------
+    # channel + planning view
+    # ------------------------------------------------------------------
+
+    def _refade(self):
+        """New small-scale block-fading realization, same large-scale gains."""
+        self.gains = sample_rayleigh_gains(self.avg_gains, self.rng)
+        self.rates = spectrum_efficiency(self.config.channel, self.gains)
+
+    @property
+    def channel(self) -> ChannelState:
+        """Current fading block as a ``ChannelState`` view."""
+        return ChannelState(cfg=self.config.channel, avg_gains=self.avg_gains,
+                            gains=self.gains, rates=self.rates)
+
+    def planning_alphas(self, active_reqs: list[Request]) -> np.ndarray:
+        """Acceptance rates the controller plans with: online estimates when
+        enabled, else the requests' declared task profiles."""
+        if self.estimator is not None:
+            return self.estimator.alpha_hat
+        return np.array([r.alpha for r in active_reqs])
+
+    def plan(self):
+        """Admit + refade + solve draft control for the current active set
+        WITHOUT executing the round.  Analytic benchmarks and sweeps use
+        this to query the configured scheme at a live channel realization."""
+        active_reqs = self.admit()
+        if not active_reqs:
+            raise RuntimeError("plan() with no active requests")
+        self._refade()
+        t_slm = np.array([r.T_S for r in active_reqs])
+        return self.controller.plan(self.planning_alphas(active_reqs), t_slm,
+                                    self.rates)
+
+    # ------------------------------------------------------------------
+    # the round loop
+    # ------------------------------------------------------------------
+
+    def step(self, key=None) -> RoundRecord | None:
+        """Run one protocol round (or one pipelined half-round).  Returns
+        ``None`` when the cell is idle (no queued or active requests)."""
+        active_reqs = self.admit()
+        if not active_reqs:
+            # idle: the in-flight verification (pipelined) completes while
+            # nothing overlaps it — drain it so a later resume does not
+            # overlap work that already finished
+            if self._pending_ver:
+                # bill the drain to the scheduler too, so stats.goodput
+                # agrees with summary() once the session completes
+                self.scheduler.stats.wall_time += self._pending_ver
+                self.scheduler.clock += self._pending_ver
+            self._drained_ver += self._pending_ver
+            self._pending_ver = 0.0
+            self._pending_rids = set()
+            return None
+        if self.config.schedule == "pipelined":
+            return self._step_pipelined(active_reqs, key)
+        return self._step_sync(active_reqs, key)
+
+    def _step_sync(self, active_reqs: list[Request], key=None) -> RoundRecord:
+        K = len(active_reqs)
+        # --- step 1: system configuration ---
+        self._refade()
+        t_slm = np.array([r.T_S for r in active_reqs])
+        plan = self.controller.plan(self.planning_alphas(active_reqs), t_slm,
+                                    self.rates)
+        lengths = np.asarray(plan.lengths, dtype=np.int64)
+        bandwidth = np.asarray(plan.bandwidth, dtype=np.float64)
+
+        # --- steps 2-3: drafting + upload latency (straggler-limited) ---
+        per_dev_lat = lengths * (t_slm + self.controller.q_tok_bits
+                                 / np.maximum(bandwidth * self.rates, 1e-9))
+        active = np.ones(K, dtype=bool)
+        if self.config.deadline_factor is not None:
+            deadline = self.config.deadline_factor * np.median(per_dev_lat)
+            active = per_dev_lat <= deadline
+            if not active.any():
+                active[:] = True
+        t_ma = float(np.max(per_dev_lat[active]))
+
+        # --- step 4: batched verification (pluggable backend) ---
+        K_active = int(active.sum())
+        t_ver = float(plan.meta.get("t_ver",
+                                    self.controller.t_ver_model(K_active)))
+        accepted = np.asarray(
+            self.backend.verify(lengths, active_reqs, self.rng, key=key,
+                                mask=active),
+            dtype=np.int64)
+        accepted = np.where(active, accepted, 0)
+
+        # --- step 5: feedback / estimator update (active devices only:
+        # a deadline-dropped device reported nothing, not a rejection) ---
+        if self.estimator is not None:
+            self.estimator.update(np.maximum(accepted - 1, 0), lengths,
+                                  mask=active)
+
+        t_round = t_ma + t_ver
+        rec = RoundRecord(
+            lengths=lengths, bandwidth=bandwidth, accepted=accepted,
+            t_ma=t_ma, t_ver=t_ver, t_round=t_round,
+            predicted_goodput=plan.goodput,
+            realized_goodput=float(np.sum(accepted) / t_round),
+            active=active,
+            rids=np.array([r.rid for r in active_reqs]),
+        )
+        self.history.append(rec)
+        self._round_idx += 1
+        self._retire(active_reqs, accepted, t_round)
+        return rec
+
+    def _step_pipelined(self, active_reqs: list[Request],
+                        key=None) -> RoundRecord:
+        """Beyond-paper pipelined schedule: while one half-batch drafts and
+        uploads, the server verifies the other half; wall-clock per half-round
+        is max(T_ma(current half), T_ver(other half)).  Works with any
+        backend (the legacy ``run_pipelined`` was a synthetic-only fork)."""
+        K = len(active_reqs)
+        self._refade()
+        alphas_all = self.planning_alphas(active_reqs)
+        t_slm_all = np.array([r.T_S for r in active_reqs])
+        order = np.argsort([r.alpha for r in active_reqs], kind="stable")
+        halves = [order[0::2], order[1::2]]
+        h = halves[self._pipe_parity % 2]
+        if len(h) == 0:
+            h = halves[0]
+        self._pipe_parity += 1
+
+        plan = self.controller.plan(alphas_all[h], t_slm_all[h], self.rates[h])
+        lengths_h = np.asarray(plan.lengths, dtype=np.int64)
+        bandwidth_h = np.asarray(plan.bandwidth, dtype=np.float64)
+        per_dev = lengths_h * (t_slm_all[h] + self.controller.q_tok_bits
+                               / np.maximum(bandwidth_h * self.rates[h], 1e-9))
+        t_ma = float(np.max(per_dev))
+        h_rids = {active_reqs[j].rid for j in h}
+        if self._pending_rids & h_rids:
+            # a device in this half still awaits its own verification
+            # (K == 1, or churn reshuffled the halves): it cannot draft
+            # before that result returns, so this step runs serial
+            step_time = t_ma + self._pending_ver
+        else:
+            # overlap with the OTHER half's verification still in flight
+            step_time = max(t_ma, self._pending_ver)
+        t_ver = float(plan.meta.get("t_ver",
+                                    self.controller.t_ver_model(len(h))))
+        self._pending_ver = t_ver
+        self._pending_rids = h_rids
+
+        accepted_h = np.asarray(
+            self.backend.verify(lengths_h, [active_reqs[j] for j in h],
+                                self.rng, key=key), dtype=np.int64)
+
+        mask = np.zeros(K, dtype=bool)
+        mask[h] = True
+        accepted = np.zeros(K, dtype=np.int64)
+        accepted[h] = accepted_h
+        lengths = np.zeros(K, dtype=np.int64)
+        lengths[h] = lengths_h
+        bandwidth = np.zeros(K, dtype=np.float64)
+        bandwidth[h] = bandwidth_h
+        if self.estimator is not None:
+            self.estimator.update(np.maximum(accepted - 1, 0),
+                                  np.maximum(lengths, 1), mask=mask)
+
+        rec = RoundRecord(
+            lengths=lengths, bandwidth=bandwidth, accepted=accepted,
+            t_ma=t_ma, t_ver=t_ver, t_round=step_time,
+            predicted_goodput=plan.goodput,
+            realized_goodput=float(np.sum(accepted) / step_time),
+            active=mask,
+            rids=np.array([r.rid for r in active_reqs]),
+        )
+        self.history.append(rec)
+        self._round_idx += 1
+        self._retire(active_reqs, accepted, step_time, participated=mask)
+        return rec
+
+    # ------------------------------------------------------------------
+    # driving loops
+    # ------------------------------------------------------------------
+
+    def run(self, n_rounds: int | None = None) -> dict:
+        """Run up to ``n_rounds`` rounds (or until idle when ``None``)."""
+        i = 0
+        while n_rounds is None or i < n_rounds:
+            if self.step() is None:
+                break
+            i += 1
+        return self.summary()
+
+    def drain(self) -> dict:
+        """Run until every submitted request has retired."""
+        return self.run(None)
+
+    @property
+    def idle(self) -> bool:
+        return self.scheduler.idle
+
+    # ------------------------------------------------------------------
+    # accounting
+    # ------------------------------------------------------------------
+
+    def summary(self) -> dict:
+        """Protocol-level accounting over all executed rounds (raw accepted
+        tokens; see ``scheduler.stats`` for the per-request capped view).
+        In the pipelined schedule the trailing in-flight verification is
+        drained into the wall-clock."""
+        total_tokens = float(sum(np.sum(r.accepted) for r in self.history))
+        total_time = float(sum(r.t_round for r in self.history))
+        total_time += self._pending_ver + self._drained_ver
+        out = {
+            "rounds": len(self.history),
+            "tokens": total_tokens,
+            "seconds": total_time,
+            "goodput": total_tokens / total_time if total_time else 0.0,
+        }
+        if self.history:
+            out["mean_predicted_goodput"] = float(np.mean(
+                [r.predicted_goodput for r in self.history]))
+        return out
+
+    # ------------------------------------------------------------------
+    # fault tolerance: checkpoint/restore of the protocol state
+    # ------------------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {
+            "round_idx": self._round_idx,
+            "avg_gains": np.asarray(self.avg_gains).copy(),
+            "alpha_hat": (self.estimator.alpha_hat
+                          if self.estimator is not None else None),
+        }
+
+    def load_state_dict(self, state: dict):
+        self.admit()
+        avg = np.asarray(state["avg_gains"], dtype=np.float64)
+        if len(avg) != len(self.scheduler.active):
+            raise ValueError(
+                f"checkpoint holds {len(avg)} devices, cell has "
+                f"{len(self.scheduler.active)} active")
+        self._round_idx = state["round_idx"]
+        self.avg_gains = avg.copy()
+        self._refade()
+        if state.get("alpha_hat") is not None and self.estimator is not None:
+            self.estimator.alpha_hat = state["alpha_hat"]

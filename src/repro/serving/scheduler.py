@@ -68,16 +68,22 @@ class RoundScheduler:
         return (np.array([r.alpha for r in self.active]),
                 np.array([r.T_S for r in self.active]))
 
-    def complete_round(self, accepted: np.ndarray, round_time: float):
-        """Account one round; retire requests that reached their budget."""
+    def complete_round(self, accepted: np.ndarray, round_time: float,
+                       participated: np.ndarray | None = None):
+        """Account one round; retire requests that reached their budget.
+
+        ``participated`` (when given, aligned with the active set) marks
+        which requests actually took part — the off half of a pipelined
+        half-round sits out and must not accrue a per-request round."""
         self.clock += round_time
         self.stats.total_rounds += 1
         self.stats.wall_time += round_time
         still = []
-        for req, n in zip(self.active, accepted):
+        for i, (req, n) in enumerate(zip(self.active, accepted)):
             produced = int(min(n, req.max_new_tokens - req.generated))
             req.generated += produced
-            req.rounds += 1
+            if participated is None or participated[i]:
+                req.rounds += 1
             self.stats.total_tokens += produced
             if req.generated >= req.max_new_tokens:
                 req.done = True

@@ -84,11 +84,28 @@ class SpecEngine:
     # ------------------------------------------------------------------
 
     def spin_round(self, state: StreamState, lengths: np.ndarray,
-                   key: jax.Array, vhat: int = 64):
+                   key: jax.Array, vhat: int = 64,
+                   freeze: np.ndarray | None = None):
         """One Multi-SPIN round with per-stream draft lengths (zero-padded to
-        the max).  Returns (state, VerifyResult, draft_result)."""
+        the max).  Returns (state, VerifyResult, draft_result).
+
+        ``freeze`` marks streams that must NOT advance this round (retired
+        requests, or the off half of a pipelined schedule).  Frozen rows
+        still ride through the batched forwards (the reference engine cannot
+        skip batch rows) but commit nothing: positions, pending token, and
+        committed text are untouched.  For attention targets/drafts the
+        cache is pointer-indexed, so the stale window writes are overwritten
+        on the row's next live round; SSM targets would need a pre-window
+        state restore and are rejected.
+        """
         B = state.pending.shape[0]
         lengths = np.asarray(lengths, dtype=np.int64)
+        frz_np = (np.zeros(B, dtype=bool) if freeze is None
+                  else np.asarray(freeze, dtype=bool))
+        if frz_np.any() and needs_state_rollback(self.target_cfg):
+            raise NotImplementedError(
+                "freezing streams of an SSM/hybrid target needs a pre-window "
+                "state snapshot (see ROADMAP open items)")
         L = int(lengths.max())
         k_draft, k_verify = jax.random.split(key)
 
@@ -133,15 +150,19 @@ class SpecEngine:
                 "SSM draft models need snapshot drafting; assigned pairs use "
                 "attention SLMs (DESIGN.md §Arch-applicability)")
 
-        new_target_pos = state.target_pos + 1 + res.accept_counts
-        new_draft_pos = state.draft_pos + 1 + res.accept_counts
-        new_pending = jnp.take_along_axis(
+        frz = jnp.asarray(frz_np)
+        adv = jnp.where(frz, 0, 1 + res.accept_counts)
+        new_target_pos = state.target_pos + adv
+        new_draft_pos = state.draft_pos + adv
+        sampled = jnp.take_along_axis(
             res.output_tokens, res.accept_counts[:, None], axis=1)[:, 0]
+        new_pending = jnp.where(frz, state.pending, sampled)
 
         out_np = np.asarray(res.output_tokens)
         n_np = np.asarray(res.accept_counts)
         for b in range(B):
-            state.committed[b].extend(out_np[b, :n_np[b] + 1].tolist())
+            if not frz_np[b]:
+                state.committed[b].extend(out_np[b, :n_np[b] + 1].tolist())
 
         new_state = StreamState(pending=new_pending, target_pos=new_target_pos,
                                 draft_pos=new_draft_pos,

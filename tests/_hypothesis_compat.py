@@ -1,0 +1,25 @@
+"""Import hypothesis, or degrade so that ONLY the property tests skip.
+
+A module-level ``pytest.importorskip("hypothesis")`` would skip every test
+in the importing file; this shim instead turns each ``@given`` test into an
+individual skip while the plain tests still run.  ``st`` resolves any
+strategy expression evaluated at decoration time to a dummy.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ModuleNotFoundError:
+    class _MissingStrategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _MissingStrategies()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed "
+                                       "(pip install '.[test]')")
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

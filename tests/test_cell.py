@@ -1,0 +1,296 @@
+"""Tests for the MultiSpinCell session API, scheme registry, and pluggable
+verification backends."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    CellConfig,
+    ChannelConfig,
+    MultiSpinCell,
+    MultiSpinController,
+    Request,
+    SyntheticBackend,
+    VerificationLatencyModel,
+    available_schemes,
+    get_scheme,
+)
+from repro.core.controller import SCHEMES, AcceptanceEstimator
+
+
+def _req(rid, alpha=0.8, T_S=0.01, max_new_tokens=10 ** 9, task=""):
+    return Request(rid=rid, prompt_len=8, max_new_tokens=max_new_tokens,
+                   alpha=alpha, T_S=T_S, task=task)
+
+
+def _cell(scheme="hete", K=4, seed=0, **cfg_kw):
+    cfg = CellConfig(scheme=scheme, max_batch=K, seed=seed, **cfg_kw)
+    cell = MultiSpinCell(cfg)
+    rng = np.random.default_rng(seed)
+    for i in range(K):
+        cell.submit(_req(i, alpha=float(rng.choice([0.71, 0.74, 0.86])),
+                         T_S=0.009 * float(rng.uniform(0.85, 1.15))))
+    return cell
+
+
+# ---------------------------------------------------------------------------
+# CellConfig
+# ---------------------------------------------------------------------------
+
+def test_cellconfig_json_round_trip():
+    cfg = CellConfig(scheme="hete-packed",
+                     channel=ChannelConfig(total_bandwidth_hz=2e6,
+                                           vocab_size=151936),
+                     t_ver_fix=0.05, t_ver_lin=0.01, L_max=12, L_fixed=5,
+                     max_batch=7, use_estimator=True, deadline_factor=1.5,
+                     schedule="pipelined", seed=3)
+    back = CellConfig.from_json(cfg.to_json())
+    assert back == cfg
+    assert isinstance(back.channel, ChannelConfig)
+    assert back.channel.total_bandwidth_hz == 2e6
+
+
+def test_cellconfig_rejects_unknown_scheme_and_schedule():
+    with pytest.raises(ValueError):
+        CellConfig(scheme="nope")
+    with pytest.raises(ValueError):
+        CellConfig(schedule="nope")
+
+
+# ---------------------------------------------------------------------------
+# Scheme registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_all_five_schemes():
+    assert set(available_schemes()) == {"hete", "homo", "uni-bw", "fixed",
+                                        "hete-packed"}
+    # the controller's legacy SCHEMES tuple is derived, so it cannot drift
+    assert set(SCHEMES) == set(available_schemes())
+
+
+@pytest.mark.parametrize("scheme", sorted({"hete", "homo", "uni-bw", "fixed",
+                                           "hete-packed"}))
+def test_registry_matches_controller_dispatch(scheme):
+    """controller.plan == calling the registered solver directly."""
+    rng = np.random.default_rng(0)
+    K = 6
+    alphas = rng.choice([0.71, 0.74, 0.86], K)
+    T_S = rng.uniform(0.85, 1.15, K) * 0.009
+    rates = rng.uniform(4.0, 8.0, K)
+    ctrl = MultiSpinController(
+        scheme=scheme, q_tok_bits=31744.0, bandwidth_hz=10e6,
+        t_ver_model=VerificationLatencyModel(0.035, 0.0177), L_max=12)
+    via_plan = ctrl.plan(alphas, T_S, rates)
+    direct = get_scheme(scheme)(ctrl, alphas, T_S, rates)
+    np.testing.assert_array_equal(via_plan.lengths, direct.lengths)
+    np.testing.assert_allclose(via_plan.bandwidth, direct.bandwidth)
+    assert via_plan.goodput == pytest.approx(direct.goodput)
+
+
+def test_unknown_scheme_raises_with_choices():
+    with pytest.raises(KeyError, match="hete"):
+        get_scheme("does-not-exist")
+
+
+# ---------------------------------------------------------------------------
+# Session lifecycle
+# ---------------------------------------------------------------------------
+
+def test_cell_submit_step_retire_refill():
+    cfg = CellConfig(scheme="fixed", L_fixed=4, max_batch=2, seed=0)
+    cell = MultiSpinCell(cfg)
+    for i in range(5):
+        cell.submit(_req(i, max_new_tokens=8))
+    rec = cell.step()
+    assert len(rec.lengths) == 2                      # batch capped
+    total_rounds = 1
+    while cell.step() is not None:
+        total_rounds += 1
+        assert total_rounds < 100
+    assert cell.idle
+    assert cell.step() is None                        # idle cell no-ops
+    s = cell.scheduler.stats
+    assert s.completed == 5
+    assert s.total_tokens == 5 * 8                    # capped per request
+    assert s.goodput > 0
+    # channel/estimator rows track the active set down to empty
+    assert len(cell.avg_gains) == 0
+
+
+def test_cell_replans_on_join_and_leave():
+    cell = _cell(K=3, scheme="fixed")
+    r1 = cell.step()
+    assert len(r1.lengths) == 3
+    # a fourth device joins mid-session: next round plans for 4 (the legacy
+    # protocol froze its device list at construction)
+    cfg_batch = cell.config.max_batch
+    cell.config.max_batch = 4        # single source of truth for capacity
+    cell.submit(_req(99))
+    r2 = cell.step()
+    assert len(r2.lengths) == 4
+    assert 99 in set(r2.rids.tolist())
+    assert len(cell.avg_gains) == 4
+    # a device drops: survivors re-planned, channel rows pruned
+    cell.leave(99)
+    r3 = cell.step()
+    assert len(r3.lengths) == 3
+    assert 99 not in set(r3.rids.tolist())
+    assert len(cell.avg_gains) == 3
+    cell.config.max_batch = cfg_batch
+    with pytest.raises(KeyError):
+        cell.leave(1234)
+
+
+def test_cell_checkpoint_restore():
+    cell = _cell(K=5, use_estimator=True)
+    cell.run(5)
+    snap = cell.state_dict()
+    cell2 = _cell(K=5, use_estimator=True)
+    cell2.load_state_dict(snap)
+    assert cell2._round_idx == 5
+    np.testing.assert_allclose(cell2.avg_gains, cell.avg_gains)
+    np.testing.assert_allclose(cell2.estimator.alpha_hat,
+                               cell.estimator.alpha_hat)
+
+
+def test_cell_summary_and_predicted_goodput_agree():
+    cell = _cell(K=8)
+    out = cell.run(30)
+    assert out["tokens"] > 0
+    assert abs(out["goodput"] - out["mean_predicted_goodput"]) \
+        / out["mean_predicted_goodput"] < 0.3
+
+
+# ---------------------------------------------------------------------------
+# Estimator feedback (satellite: masked update)
+# ---------------------------------------------------------------------------
+
+def test_estimator_update_masks_inactive_devices():
+    est = AcceptanceEstimator(3)
+    before = est.alpha_hat.copy()
+    est.update(np.array([0, 3, 1]), np.array([4, 4, 4]),
+               mask=np.array([False, True, True]))
+    after = est.alpha_hat
+    # deadline-dropped device 0 (accepted=0 because it was SKIPPED, not
+    # rejected) keeps its prior; participants move
+    assert after[0] == pytest.approx(before[0])
+    assert after[1] != pytest.approx(before[1])
+    assert after[2] != pytest.approx(before[2])
+
+
+def test_deadline_dropped_devices_do_not_bias_estimator():
+    """A device that misses every deadline must keep alpha_hat at its prior
+    instead of being dragged toward zero by phantom rejections."""
+    cfg = CellConfig(scheme="fixed", L_fixed=6, max_batch=4,
+                     use_estimator=True, deadline_factor=1.01, seed=0)
+    cell = MultiSpinCell(cfg)
+    # device 3 is a 100x straggler: always dropped by the deadline
+    for i in range(4):
+        cell.submit(_req(i, alpha=0.9, T_S=0.01 * (100.0 if i == 3 else 1.0)))
+    cell.admit()                 # provision estimator rows
+    prior = cell.estimator.alpha_hat.copy()
+    dropped_rounds = 0
+    for _ in range(25):
+        rec = cell.step()
+        dropped_rounds += int(~rec.active[3])
+    assert dropped_rounds > 0
+    assert cell.estimator.alpha_hat[3] == pytest.approx(prior[3])
+    # participating devices' estimates moved off the prior
+    assert abs(cell.estimator.alpha_hat[0] - prior[0]) > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Pipelined schedule through the cell (backend-agnostic fold of the legacy
+# synthetic-only run_pipelined fork)
+# ---------------------------------------------------------------------------
+
+def test_pipelined_schedule_beats_sync_goodput():
+    sync = _cell(K=12, seed=1).run(40)
+    pipe_cell = _cell(K=12, seed=1, schedule="pipelined")
+    piped = pipe_cell.run(80)
+    assert piped["goodput"] > sync["goodput"]
+    # drain: trailing in-flight verification is charged to wall-clock
+    assert piped["seconds"] > sum(r.t_round for r in pipe_cell.history)
+
+
+def test_pipelined_alternates_halves():
+    cell = _cell(K=6, schedule="pipelined")
+    r1, r2 = cell.step(), cell.step()
+    assert r1.active.sum() == 3 and r2.active.sum() == 3
+    assert not np.any(r1.active & r2.active)          # disjoint halves
+    assert np.all(r1.accepted[~r1.active] == 0)
+
+
+# ---------------------------------------------------------------------------
+# Backend parity (synthetic vs real engine accounting)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_backend_parity_accepted_token_accounting():
+    """With a self-drafting engine (alpha == 1) and a synthetic cell at
+    alpha == 1, both backends must account exactly L+1 accepted tokens per
+    device per round through the identical cell loop."""
+    jax = pytest.importorskip("jax")
+    from repro.api import EngineBackend, SpecEngine
+    from repro.configs import get_config
+
+    tcfg = get_config("qwen2.5-3b").smoke()
+    eng = SpecEngine(tcfg, tcfg, max_len=96)
+    kt, _ = jax.random.split(jax.random.PRNGKey(0))
+    eng.t_params = eng.target.init(kt)
+    eng.d_params = eng.t_params          # identical weights: accept-all
+    K = 2
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (K, 8), 0,
+                                 tcfg.vocab_size)
+    backend = EngineBackend(eng, eng.start(prompts), vhat=tcfg.vocab_size)
+
+    def build(b):
+        cfg = CellConfig(scheme="fixed", L_fixed=3, max_batch=K, seed=0)
+        cell = MultiSpinCell(cfg, backend=b)
+        for i in range(K):
+            cell.submit(_req(i, alpha=1.0, T_S=0.01))
+        return cell
+
+    cell_e, cell_s = build(backend), build(SyntheticBackend())
+    for _ in range(3):
+        rec_e, rec_s = cell_e.step(), cell_s.step()
+        np.testing.assert_array_equal(rec_e.accepted, rec_e.lengths + 1)
+        np.testing.assert_array_equal(rec_s.accepted, rec_s.lengths + 1)
+        np.testing.assert_array_equal(rec_e.accepted, rec_s.accepted)
+    assert cell_e.summary()["tokens"] == cell_s.summary()["tokens"]
+    # the engine really committed those tokens
+    assert all(len(c) == 8 + 3 * 4 for c in backend.state.committed)
+
+    # pipelined schedule with the engine: the off half is FROZEN — its
+    # stream must not advance, so content always matches accounting
+    cell_e.config.schedule = "pipelined"
+    r1 = cell_e.step()
+    np.testing.assert_array_equal(np.sort(r1.accepted), [0, 4])
+    lens = [len(c) for c in backend.state.committed]
+    assert sorted(l - (8 + 12) for l in lens) == [0, 4]
+    r2 = cell_e.step()
+    assert not np.any(r1.active & r2.active)          # other half this time
+    assert all(len(c) == 8 + 12 + 4 for c in backend.state.committed)
+
+
+# ---------------------------------------------------------------------------
+# Legacy shim
+# ---------------------------------------------------------------------------
+
+def test_protocol_shim_is_cell_backed():
+    from repro.core.channel import ChannelConfig as CC
+    from repro.core.protocol import DeviceProfile, MultiSpinProtocol
+
+    rng = np.random.default_rng(0)
+    devices = [DeviceProfile(T_S=0.01, alpha=0.8) for _ in range(4)]
+    ctrl = MultiSpinController(
+        scheme="hete", q_tok_bits=31744.0, bandwidth_hz=10e6,
+        t_ver_model=VerificationLatencyModel(0.035, 0.0177), L_max=12)
+    proto = MultiSpinProtocol(ctrl, CC(), devices, rng)
+    assert isinstance(proto.cell, MultiSpinCell)
+    assert proto.cell.controller is ctrl            # caller's instance honored
+    out = proto.run(5)
+    assert out["rounds"] == 5 and out["goodput"] > 0
+    assert len(proto.history) == 5

@@ -2,7 +2,8 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.bandwidth import solve_equalized_phi, solve_equalized_theta
 from repro.core.channel import ChannelConfig, ChannelState

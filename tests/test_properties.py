@@ -3,7 +3,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (pip install '.[test]'); "
+           "property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.bandwidth import solve_equalized_phi
 from repro.core.goodput import expected_accepted_tokens
