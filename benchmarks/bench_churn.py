@@ -1,0 +1,166 @@
+"""Goodput under churn: Poisson join/leave against a live Multi-SPIN cell.
+
+The paper's Sec.-V scenario — devices joining and leaving mid-session with
+re-planning every round — measured end to end: arrivals are Poisson(rate)
+per round, each admitted device runs a finite request, and every active
+device independently departs early with probability ``p_leave`` per round
+(exponential lifetimes).  Reported per scheme: goodput, completion count,
+mean queue wait (admission delay), and mean sojourn time.
+
+Two backends:
+
+  * synthetic (default)  — analytic acceptance draws, scales to hundreds of
+    rounds; measures the PROTOCOL cost of churn (re-planning, refilling).
+  * ``--engine``         — a real paged ``SpecEngine`` at smoke scale; churn
+    exercises dynamic admission (page-pool gated), stream retirement, and
+    page recycling on real model weights.  This is the path CI smokes so
+    `engine batch exhausted`-style regressions cannot land silently.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_churn              # synthetic
+    PYTHONPATH=src python -m benchmarks.bench_churn --engine
+    PYTHONPATH=src python -m benchmarks.bench_churn --smoke      # CI gate
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.api import CellConfig, MultiSpinCell, Request
+
+ALPHAS = [0.71, 0.74, 0.86, 0.93]
+
+
+def _poisson_churn_cell(cell: MultiSpinCell, rounds: int, rate: float,
+                        p_leave: float, rng: np.random.Generator,
+                        mean_tokens: int = 48) -> dict:
+    """Drive ``cell`` for ``rounds`` rounds of Poisson join/leave; returns
+    churn-level accounting on top of the cell's own summary."""
+    next_rid = 10_000
+    submitted = left_early = idle_rounds = 0
+    for _ in range(rounds):
+        for _ in range(rng.poisson(rate)):
+            cell.submit(Request(
+                rid=next_rid, prompt_len=8,
+                max_new_tokens=int(rng.integers(mean_tokens // 2,
+                                                2 * mean_tokens)),
+                alpha=float(rng.choice(ALPHAS)),
+                T_S=0.009 * float(rng.uniform(0.85, 1.15))))
+            next_rid += 1
+            submitted += 1
+        if cell.step() is None:
+            idle_rounds += 1
+            continue
+        # early departures (device failure / user abort), paper Sec. V
+        for req in list(cell.scheduler.active):
+            if rng.random() < p_leave:
+                cell.leave(req.rid)
+                left_early += 1
+    stats = cell.scheduler.stats
+    return {
+        "submitted": submitted,
+        "completed": stats.completed,
+        "left_early": left_early,
+        "idle_rounds": idle_rounds,
+        "tokens": stats.total_tokens,
+        "goodput": stats.goodput,
+        "queued_at_end": len(cell.scheduler.queue),
+    }
+
+
+def run_synthetic(rounds: int, rate: float, p_leave: float, max_batch: int,
+                  scheme: str, seed: int, mean_tokens: int = 48) -> dict:
+    cfg = CellConfig(scheme=scheme, max_batch=max_batch, seed=seed)
+    cell = MultiSpinCell(cfg)
+    return _poisson_churn_cell(cell, rounds, rate, p_leave,
+                               np.random.default_rng(seed),
+                               mean_tokens=mean_tokens)
+
+
+def run_engine(rounds: int, rate: float, p_leave: float, max_batch: int,
+               scheme: str, seed: int, mean_tokens: int = 8) -> dict:
+    """Same churn trace against a real paged SpecEngine at smoke scale."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.serving import SpecEngine
+    from repro.serving.backends import EngineBackend
+
+    tcfg = get_config("qwen2.5-3b").smoke()
+    dcfg = tcfg.replace(num_layers=1, d_model=32, num_heads=2, num_kv_heads=1,
+                        head_dim=16, d_ff=64, name="draft-smoke")
+    eng = SpecEngine(tcfg, dcfg, max_len=128, cache_kind="paged",
+                     num_pages=max_batch * 2 * (128 // 16))
+    eng.init_params(jax.random.PRNGKey(seed))
+    prompts = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                 (max_batch, 8), 0, tcfg.vocab_size)
+    backend = EngineBackend(eng, eng.start(prompts))
+    cfg = CellConfig(scheme=scheme, max_batch=max_batch, L_max=6, seed=seed)
+    cell = MultiSpinCell(cfg, backend=backend)
+    out = _poisson_churn_cell(cell, rounds, rate, p_leave,
+                              np.random.default_rng(seed),
+                              mean_tokens=mean_tokens)
+    # hard churn invariants: the allocator never leaks under join/leave
+    eng.t_pages.check_invariants()
+    eng.d_pages.check_invariants()
+    out["free_pages"] = eng.pool_stats()["free_pages"]
+    return out
+
+
+def run(fast: bool = True, engine: bool = False, smoke: bool = False,
+        rounds: int | None = None, rate: float = 0.8, p_leave: float = 0.02,
+        max_batch: int = 8, seed: int = 0) -> list[dict]:
+    rows = []
+    mean_tokens = None
+    if smoke:
+        schemes, rounds, engine = ("fixed",), 8, True
+        rate, max_batch, mean_tokens = 1.0, 3, 4
+    else:
+        schemes = ("hete", "fixed")
+        rounds = rounds if rounds is not None else (60 if fast else 400)
+    for scheme in schemes:
+        fn = run_engine if engine else run_synthetic
+        kw = {} if mean_tokens is None else {"mean_tokens": mean_tokens}
+        out = fn(rounds, rate, p_leave, max_batch, scheme, seed, **kw)
+        ok = out["completed"] > 0 and out["tokens"] > 0
+        rows.append({
+            "name": f"churn/{'engine' if engine else 'synthetic'}/{scheme}",
+            "us_per_call": "",
+            "derived": (f"goodput={out['goodput']:.1f} "
+                        f"completed={out['completed']}/{out['submitted']} "
+                        f"left_early={out['left_early']} "
+                        f"queued={out['queued_at_end']} ok={ok}"),
+            **out,
+        })
+        if smoke and not ok:
+            raise SystemExit(f"churn smoke FAILED: {out}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=0.8,
+                    help="Poisson arrivals per round")
+    ap.add_argument("--p-leave", type=float, default=0.02,
+                    help="per-round early-departure probability")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", action="store_true",
+                    help="real paged SpecEngine instead of synthetic draws")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast engine-backed CI gate (exits non-zero on "
+                    "a dead churn path)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for r in run(fast=not args.full, engine=args.engine, smoke=args.smoke,
+                 rounds=args.rounds, rate=args.rate, p_leave=args.p_leave,
+                 max_batch=args.max_batch, seed=args.seed):
+        print(r["name"], r["derived"])
+
+
+if __name__ == "__main__":
+    main()

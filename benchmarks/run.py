@@ -23,6 +23,7 @@ def main() -> None:
         bench_acceptance,
         bench_bandwidth_sweep,
         bench_beyond,
+        bench_churn,
         bench_goodput_vs_L,
         bench_optimal_L,
         bench_protocols,
@@ -41,6 +42,7 @@ def main() -> None:
         "protocols": lambda: bench_protocols.run(fast),
         "bandwidth_sweep": lambda: bench_bandwidth_sweep.run(fast),
         "scaling_K": lambda: bench_scaling_K.run(fast),
+        "churn": lambda: bench_churn.run(fast),
         "beyond": lambda: bench_beyond.run(fast),
         "roofline": lambda: roofline.run(fast),
     }

@@ -6,6 +6,10 @@ channel state, the ``EngineBackend`` drafts + batch-verifies on real
 weights, and goodput is accounted with the paper's latency model.  The
 online acceptance estimator feeds planning (protocol step 5).
 
+The engine uses the PAGED KV cache, so the device population is live: a
+device joins mid-session (admitted onto pooled pages — no fixed batch) and
+another leaves (its pages return to the pool).
+
   PYTHONPATH=src python examples/multi_spin_serving.py
 """
 
@@ -33,7 +37,7 @@ draft_cfg = target_cfg.replace(num_layers=1, d_model=64, num_heads=2,
                                num_kv_heads=1, head_dim=32, d_ff=128,
                                name="draft")
 
-engine = SpecEngine(target_cfg, draft_cfg, max_len=256)
+engine = SpecEngine(target_cfg, draft_cfg, max_len=256, cache_kind="paged")
 engine.init_params(jax.random.PRNGKey(0))
 prompts = jax.random.randint(jax.random.PRNGKey(1), (K, PROMPT_LEN), 0,
                              target_cfg.vocab_size)
@@ -41,7 +45,7 @@ backend = EngineBackend(engine, engine.start(prompts))
 
 config = CellConfig(
     scheme="hete", channel=ChannelConfig(vocab_size=target_cfg.vocab_size),
-    t_ver_fix=0.035, t_ver_lin=0.0177, L_max=8, max_batch=K,
+    t_ver_fix=0.035, t_ver_lin=0.0177, L_max=8, max_batch=K + 1,
     use_estimator=True)
 cell = MultiSpinCell(config, backend=backend, rng=rng)
 for i, f in enumerate(rng.uniform(0.85, 1.15, K)):
@@ -50,6 +54,15 @@ for i, f in enumerate(rng.uniform(0.85, 1.15, K)):
 
 print(f"serving {K} devices, target={target_cfg.name}, draft={draft_cfg.name}")
 for i in range(ROUNDS):
+    if i == 2:     # a new device joins AFTER engine.start(): paged admission
+        cell.submit(Request(rid=K, prompt_len=8, max_new_tokens=10 ** 9,
+                            alpha=0.8, T_S=0.01, task="mixed"))
+        print(f"  + device {K} joins (pool: {engine.pool_stats()['free_pages']} "
+              "pages free)")
+    if i == 4:     # ... and one leaves: its pages return to the pool
+        cell.leave(0)
+        print(f"  - device 0 leaves (pool: {engine.pool_stats()['free_pages']} "
+              "pages free)")
     rec = cell.step()
     print(f"round {i}: L={rec.lengths} accepted={rec.accepted} "
           f"goodput={rec.realized_goodput:.1f} tok/s  "

@@ -12,8 +12,8 @@ Everything needed to stand up, drive, and extend a Multi-SPIN cell::
 
 Scheme solvers are pluggable (``@register_scheme``), as are verification
 backends (``SyntheticBackend`` for analytic sweeps, ``EngineBackend`` for
-real JAX models).  ``SpecEngine`` is resolved lazily to keep the analytic
-path free of jax import cost.
+real JAX models).  ``SpecEngine`` and the paged-KV-cache names are resolved
+lazily to keep the analytic path free of jax import cost.
 """
 
 from repro.core.channel import ChannelConfig, ChannelState  # noqa: F401
@@ -22,7 +22,6 @@ from repro.core.controller import (  # noqa: F401
     MultiSpinController,
     VerificationLatencyModel,
 )
-from repro.core.protocol import DeviceProfile, MultiSpinProtocol  # noqa: F401 (deprecated shim)
 from repro.core.schemes import (  # noqa: F401
     available_schemes,
     get_scheme,
@@ -50,11 +49,11 @@ __all__ = [
     "CellConfig",
     "ChannelConfig",
     "ChannelState",
-    "DeviceProfile",
     "EngineBackend",
     "MultiSpinCell",
     "MultiSpinController",
-    "MultiSpinProtocol",
+    "PagedKVCache",
+    "PagePoolExhausted",
     "Request",
     "RoundRecord",
     "RoundScheduler",
@@ -69,9 +68,11 @@ __all__ = [
     "register_scheme",
 ]
 
+_LAZY_JAX = ("SpecEngine", "PagedKVCache", "PagePoolExhausted")
+
 
 def __getattr__(name):
-    if name == "SpecEngine":
-        from repro.serving.spec_engine import SpecEngine
-        return SpecEngine
+    if name in _LAZY_JAX:
+        import repro.serving as serving
+        return getattr(serving, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

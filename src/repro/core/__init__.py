@@ -7,7 +7,8 @@ Layers:
   * draft-length control          (`draft_control`, Thm 1 / Prop 1 / Alg 1)
   * speculative verification      (`verification`, eq. 4-5 exact sampling)
   * draft generation              (`drafting`)
-  * round protocol + controller   (`protocol`, `controller`)
+  * round controller              (`controller`; the round protocol itself
+                                   lives in `repro.serving.cell`)
 """
 
 from . import (  # noqa: F401
@@ -20,13 +21,10 @@ from . import (  # noqa: F401
     schemes,
 )
 
-# Resolved lazily:
-#   * `protocol` is the deprecated shim over repro.serving.cell; importing it
-#     eagerly here would close an import cycle (core -> serving.cell -> core);
-#   * `drafting` / `verification` import jax, and the analytic layer
-#     (channel, draft control, cell with a synthetic backend) must stay
-#     importable without paying the jax startup cost.
-_LAZY = ("protocol", "drafting", "verification")
+# Resolved lazily: `drafting` / `verification` import jax, and the analytic
+# layer (channel, draft control, cell with a synthetic backend) must stay
+# importable without paying the jax startup cost.
+_LAZY = ("drafting", "verification")
 
 
 def __getattr__(name):

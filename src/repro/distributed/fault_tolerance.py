@@ -6,8 +6,8 @@ the same rules on the new mesh, (3) restore parameters from the latest
 checkpoint, (4) rescale the data pipeline.  All of that is deterministic
 planning logic — testable on CPU — plus the checkpoint layer.
 
-The serving-side analogue (device churn in the Multi-SPIN cell) is handled in
-``core.protocol`` by re-solving draft control for the survivor set; here we
+The serving-side analogue (device churn in the Multi-SPIN cell) is handled by
+``serving.cell`` re-solving draft control for the survivor set; here we
 handle the training/verification cluster itself.
 """
 

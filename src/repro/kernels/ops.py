@@ -95,6 +95,20 @@ def decode_attention(q, k_cache, v_cache, lengths):
     return ref.decode_attention_ref(q, k_cache, v_cache, lengths)
 
 
+def paged_attention(q, k_pool, v_pool, page_table, lengths):
+    """Window/decode attention through a paged KV cache.
+
+    q: (B, T, H, D); pools: (P, ps, KV, D); page_table: (B, n_slots) int32
+    (-1 = unmapped); lengths: (B,) valid kv count for query row 0 (row t
+    attends [0, lengths + t)).
+    """
+    if _use_pallas():
+        from .paged_attention import paged_attention_pallas
+        return paged_attention_pallas(q, k_pool, v_pool, page_table, lengths,
+                                      interpret=_interpret())
+    return ref.paged_attention_ref(q, k_pool, v_pool, page_table, lengths)
+
+
 def decode_attention_q8(q, k_cache, v_cache, k_scale, v_scale, lengths):
     """Decode attention over an int8 KV cache (per-head scales)."""
     if _use_pallas():

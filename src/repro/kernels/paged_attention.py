@@ -1,0 +1,122 @@
+"""Paged decode/window attention: queries against a paged KV cache, Pallas TPU.
+
+The serving engine's KV lives in fixed-size pages of a preallocated pool
+(``serving.kv_cache.PagedKVCache``); a per-stream page table maps logical
+positions to physical pages.  The kernel walks the page-table SLOTS of each
+row in grid order and lets the BlockSpec index map chase the physical page:
+the page table rides in SMEM via scalar prefetch, so the pipeline DMAs each
+KV tile HBM->VMEM directly from its physical page — the logical view is
+never materialized (the XLA reference path gathers it instead).
+
+Masking is per query row: row ``t`` of a T-token window attends logical
+positions ``[0, lengths_b + t)`` (T=1 is plain decode); unmapped slots
+(page id -1) are skipped whole.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+            acc_scr, *, ps: int, n_slots: int, gsize: int, T: int,
+            scale: float):
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+    R = T * gsize                                        # query rows
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    base = len_ref[b]
+    # the LAST query row sees the most positions; slots past its horizon or
+    # unmapped slots contribute nothing and are skipped whole
+    page_live = (pt_ref[b, si] >= 0) & (si * ps < base + T - 1)
+
+    @pl.when(page_live)
+    def _update():
+        D = q_ref.shape[-1]
+        q = q_ref[0, :, 0, :, :].astype(jnp.float32).reshape(R, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # (ps, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (R, ps), 1) + si * ps
+        trow = jax.lax.broadcasted_iota(jnp.int32, (R, ps), 0) // gsize
+        s = jnp.where(kpos < base + trow, s, _NEG)       # (R, ps)
+        m_prev = m_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[:, :1] = l_scr[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_scr[:, :1] = m_new
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(si == n_slots - 1)
+    def _finish():
+        D = q_ref.shape[-1]
+        out = acc_scr[...] / jnp.maximum(l_scr[:, :1], 1e-30)
+        o_ref[0, :, 0, :, :] = out.reshape(T, gsize, D).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           page_table: jax.Array, lengths: jax.Array,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, T, H, D); pools: (P, ps, KV, D); page_table: (B, n_slots)
+    int32 (-1 = unmapped); lengths: (B,) valid kv count for query row 0
+    (row t attends [0, lengths_b + t)).  Returns (B, T, H, D).
+
+    Grid: (B, KV, n_slots); the page table and lengths are scalar-prefetched
+    so the k/v index maps resolve slot -> physical page before each DMA.
+    All G = H/KV query heads x T window rows of one kv head share the
+    (T*G, D) q tile, so each physical page is streamed once per kv head.
+    """
+    B, T, H, D = q.shape
+    P, ps, KV, _ = k_pool.shape
+    n_slots = page_table.shape[1]
+    G = H // KV
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, T, KV, G, D)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, n_slots),
+        in_specs=[
+            pl.BlockSpec((1, T, 1, G, D), lambda b, h, si, pt, ln: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, si, pt, ln: (jnp.maximum(pt[b, si], 0),
+                                                   0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D),
+                         lambda b, h, si, pt, ln: (jnp.maximum(pt[b, si], 0),
+                                                   0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T, 1, G, D),
+                               lambda b, h, si, pt, ln: (b, 0, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T * G, 128), jnp.float32),
+            pltpu.VMEM((T * G, 128), jnp.float32),
+            pltpu.VMEM((T * G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, ps=ps, n_slots=n_slots, gsize=G, T=T,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pool, v_pool)
+    return out.reshape(B, T, H, D)

@@ -57,6 +57,43 @@ def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(B, H, D)
 
 
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        page_table: jax.Array, lengths: jax.Array,
+                        scale: float | None = None) -> jax.Array:
+    """Decode/window attention through a paged KV cache.
+
+    q: (B, T, H, D) window queries (T=1 decode, T=L+1 verification).
+    k_pool / v_pool: (P, ps, KV, D) physical page pools.
+    page_table: (B, n_slots) int32, physical page per logical slot (-1 =
+        unmapped: those positions are masked out).
+    lengths: (B,) valid kv count for query row 0; query row t attends
+        logical positions [0, lengths_b + t) — the window's own tokens are
+        already in the pool (written before attention, matching
+        ``forward_window``'s update-then-attend order).
+    Returns (B, T, H, D).
+    """
+    B, T, H, D = q.shape
+    P, ps, KV, _ = k_pool.shape
+    n_slots = page_table.shape[1]
+    S = n_slots * ps
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    safe = jnp.maximum(page_table, 0)
+    k = k_pool[safe].reshape(B, S, KV, D)
+    v = v_pool[safe].reshape(B, S, KV, D)
+    qg = q.reshape(B, T, KV, G, D)
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(jnp.float32) * scale
+    kpos = jnp.arange(S)
+    valid = kpos[None, None, :] < (lengths[:, None]
+                                   + jnp.arange(T)[None, :])[:, :, None]
+    mapped = jnp.repeat(page_table >= 0, ps, axis=1)          # (B, S)
+    valid = valid & mapped[:, None, :]
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out.reshape(B, T, H, D)
+
+
 def decode_attention_quantized_ref(q: jax.Array, k_cache: jax.Array,
                                    v_cache: jax.Array, k_scale: jax.Array,
                                    v_scale: jax.Array, lengths: jax.Array

@@ -168,6 +168,49 @@ def update_kv_cache(cache: jax.Array, new: jax.Array, offset) -> jax.Array:
     )(cache, new, offset.astype(jnp.int32))
 
 
+def paged_update_kv_cache(pool: jax.Array, new: jax.Array, offset,
+                          page_table: jax.Array) -> jax.Array:
+    """Write ``new`` (B, T, KV, D) into a page pool (P, ps, KV, D).
+
+    Logical position ``p`` of row ``b`` lives at physical page
+    ``page_table[b, p // ps]``, in-page slot ``p % ps``.  Writes through
+    unmapped table entries (-1) or past the table width are dropped — that is
+    exactly the contract frozen/retired engine rows rely on (their stale
+    window writes either land in slack slots that the row's next live round
+    overwrites, or vanish).
+    """
+    B, T = new.shape[:2]
+    P, ps = pool.shape[:2]
+    n_slots = page_table.shape[1]
+    offset = jnp.asarray(offset)
+    if offset.ndim == 0:
+        offset = jnp.broadcast_to(offset, (B,))
+    pos = offset[:, None].astype(jnp.int32) + jnp.arange(T, dtype=jnp.int32)
+    slot = pos // ps
+    phys = jnp.take_along_axis(page_table,
+                               jnp.clip(slot, 0, n_slots - 1), axis=1)
+    ok = (phys >= 0) & (slot < n_slots)
+    flat = jnp.where(ok, phys * ps + pos % ps, P * ps)    # P*ps = drop bin
+    flat_pool = pool.reshape((P * ps,) + pool.shape[2:])
+    flat_pool = flat_pool.at[flat.reshape(-1)].set(
+        new.astype(pool.dtype).reshape((B * T,) + new.shape[2:]), mode="drop")
+    return flat_pool.reshape(pool.shape)
+
+
+def paged_gather_kv(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialize the logical (B, n_slots * ps, KV, D) view of a page pool.
+
+    Unmapped slots (-1) clamp to page 0; callers mask them by position (the
+    valid prefix of a stream is always fully mapped).  This is the exact XLA
+    reference path — the Pallas ``paged_attention`` kernel streams the same
+    tiles through the page table without materializing the view.
+    """
+    B, n_slots = page_table.shape
+    ps = pool.shape[1]
+    gathered = pool[jnp.maximum(page_table, 0)]     # (B, n_slots, ps, KV, D)
+    return gathered.reshape((B, n_slots * ps) + pool.shape[2:])
+
+
 def causal_mask(Sq: int, Skv: int, offset: int = 0) -> jax.Array:
     """(1, 1, 1, Sq, Skv) boolean mask: query i attends to kv j <= i+offset."""
     qi = jnp.arange(Sq)[:, None] + offset
@@ -179,11 +222,16 @@ def attention_apply(params: Params, x: jax.Array, *, num_heads: int,
                     num_kv_heads: int, head_dim: int, positions: jax.Array,
                     mask: jax.Array | None, rope_theta: float | None,
                     kv_cache: tuple[jax.Array, jax.Array] | None = None,
-                    cache_offset: jax.Array | int | None = None):
+                    cache_offset: jax.Array | int | None = None,
+                    page_table: jax.Array | None = None):
     """Full attention layer. If kv_cache=(k_cache, v_cache) is given, new keys
     and values are written at ``cache_offset`` and attention runs over the
     whole cache (decode / chunked-prefill path). Returns (out, (k, v)) where
-    (k, v) is the updated cache (or the fresh keys/values when no cache)."""
+    (k, v) is the updated cache (or the fresh keys/values when no cache).
+
+    With ``page_table`` (B, n_slots), ``kv_cache`` holds page POOLS
+    (P, ps, KV, D): writes route through the table and attention runs over
+    the gathered logical view — same numerics, paged layout."""
     B, S, _ = x.shape
     q, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim)
     if rope_theta is not None:
@@ -191,11 +239,19 @@ def attention_apply(params: Params, x: jax.Array, *, num_heads: int,
         k = apply_rope(k, positions, rope_theta)
     if kv_cache is not None:
         k_cache, v_cache = kv_cache
-        k_cache = update_kv_cache(k_cache, k, cache_offset)
-        v_cache = update_kv_cache(v_cache, v, cache_offset)
-        k, v = k_cache, v_cache
+        if page_table is not None:
+            k_cache = paged_update_kv_cache(k_cache, k, cache_offset, page_table)
+            v_cache = paged_update_kv_cache(v_cache, v, cache_offset, page_table)
+            k = paged_gather_kv(k_cache, page_table)
+            v = paged_gather_kv(v_cache, page_table)
+        else:
+            k_cache = update_kv_cache(k_cache, k, cache_offset)
+            v_cache = update_kv_cache(v_cache, v, cache_offset)
+            k, v = k_cache, v_cache
     out = gqa_attention(q, k, v, mask)
     out = out.reshape(B, S, num_heads * head_dim) @ params["wo"]
+    if kv_cache is not None and page_table is not None:
+        return out, (k_cache, v_cache)      # pools, not the gathered view
     return out, (k, v)
 
 

@@ -136,7 +136,33 @@ class DecoderLM:
     def cache_spec(self, batch: int, max_len: int, dtype=jnp.bfloat16):
         return jax.eval_shape(lambda: self.init_cache(batch, max_len, dtype))
 
+    def init_paged_cache(self, num_pages: int, page_size: int,
+                         dtype=jnp.bfloat16) -> Params:
+        """Paged KV pool: every attention leaf is (layers, P, ps, KV, D) with
+        NO batch axis — streams own pages, not rows.  Pair it with a
+        ``"pages"`` (B, n_slots) int32 page table (``serving.PagedKVCache``)
+        to form a per-batch cache view accepted by ``prefill`` /
+        ``forward_window``."""
+        cfg = self.cfg
+        n_scan = cfg.num_layers - (cfg.first_k_dense if cfg.num_experts else 0)
+        n_dense = cfg.first_k_dense if cfg.num_experts else 0
+        shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+        cache = {"k": jnp.zeros((n_scan,) + shape, dtype),
+                 "v": jnp.zeros((n_scan,) + shape, dtype)}
+        if n_dense:
+            cache["dense_k"] = jnp.zeros((n_dense,) + shape, dtype)
+            cache["dense_v"] = jnp.zeros((n_dense,) + shape, dtype)
+        return cache
+
     CACHE_BATCH_AXES = {"k": 1, "v": 1, "dense_k": 1, "dense_v": 1}
+
+    @staticmethod
+    def _cache_kv_capacity(cache: Params) -> int:
+        """Logical KV positions per row: S for contiguous (B, S, KV, D)
+        leaves, n_slots * page_size for a paged view."""
+        if "pages" in cache:
+            return cache["pages"].shape[1] * cache["k"].shape[2]
+        return cache["k"].shape[2]
 
     def concat_caches(self, caches: list) -> Params:
         """Stack per-row caches (ragged prefill) into one batch."""
@@ -149,13 +175,15 @@ class DecoderLM:
     # ------------------------------------------------------------------
 
     def _block_apply(self, p: Params, x, *, moe: bool, positions, mask,
-                     kv_cache=None, offset=None, moe_capacity=None):
+                     kv_cache=None, offset=None, moe_capacity=None,
+                     page_table=None):
         cfg = self.cfg
         h = self.norm(p["ln_attn"], x)
         attn_out, kv = attention_apply(
             p["attn"], h, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
             head_dim=cfg.head_dim, positions=positions, mask=mask,
-            rope_theta=cfg.rope_theta, kv_cache=kv_cache, cache_offset=offset)
+            rope_theta=cfg.rope_theta, kv_cache=kv_cache, cache_offset=offset,
+            page_table=page_table)
         x = x + attn_out
         h = self.norm(p["ln_mlp"], x)
         if moe:
@@ -170,15 +198,17 @@ class DecoderLM:
         """Run all blocks; returns (hidden, new_cache, aux_sum)."""
         cfg = self.cfg
         use_cache = cache is not None
+        page_table = cache.get("pages") if use_cache else None
 
         def block_fn(p, x, kv_in):
-            # positions/mask/offset are closure-captured: they carry no
-            # gradient, and jax.checkpoint must not trace the python-bool
-            # configuration kwargs.
+            # positions/mask/offset/page_table are closure-captured: they
+            # carry no gradient, and jax.checkpoint must not trace the
+            # python-bool configuration kwargs.
             return self._block_apply(p, x, moe=self.moe_cfg is not None,
                                      positions=positions, mask=mask,
                                      kv_cache=kv_in, offset=offset,
-                                     moe_capacity=moe_capacity)
+                                     moe_capacity=moe_capacity,
+                                     page_table=page_table)
 
         if cfg.remat:
             block_fn = jax.checkpoint(block_fn)
@@ -209,7 +239,7 @@ class DecoderLM:
                     kv_in = None
                 x, kv, aux = self._block_apply(
                     p, x, moe=False, positions=positions, mask=mask,
-                    kv_cache=kv_in, offset=offset)
+                    kv_cache=kv_in, offset=offset, page_table=page_table)
                 return x, (kv[0], kv[1], aux)
 
             xs = ((params["dense_blocks"], cache["dense_k"], cache["dense_v"])
@@ -269,7 +299,7 @@ class DecoderLM:
             moe_capacity = self.no_drop_capacity if self.moe_cfg else None
         x = self._embed(params, tokens, prefix_embeds)
         B, S, _ = x.shape
-        S_max = cache["k"].shape[2]
+        S_max = self._cache_kv_capacity(cache)
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
         qi = jnp.arange(S)[:, None]
         kj = jnp.arange(S_max)[None, :]
@@ -287,6 +317,10 @@ class DecoderLM:
         T=1 -> decode step; T=L+1 -> speculative-verification scoring.
         Returns (logits (B, T, V), new_cache).
 
+        ``cache`` is either the contiguous layout (``init_cache``) or a paged
+        view: ``init_paged_cache`` pools plus a ``"pages"`` (B, n_slots)
+        page table — writes route through the table, numerics are identical.
+
         MoE layers dispatch with NO-DROP capacity here (cf = E/k => capacity =
         num window tokens): speculative verification must score with the exact
         model distribution, and capacity dropping is batch-coupled.  Training
@@ -294,7 +328,7 @@ class DecoderLM:
         """
         x = self._embed(params, tokens)
         B, T, _ = x.shape
-        S_max = cache["k"].shape[2]
+        S_max = self._cache_kv_capacity(cache)
         positions = pos[:, None] + jnp.arange(T)[None, :]
         kj = jnp.arange(S_max)[None, None, :]
         mask = (kj <= positions[:, :, None])[:, None, None]  # (B,1,1,T,S)

@@ -10,13 +10,18 @@ from .backends import EngineBackend, SyntheticBackend, VerificationBackend  # no
 from .cell import CellConfig, MultiSpinCell, RoundRecord  # noqa: F401
 from .scheduler import Request, RoundScheduler, SchedulerStats  # noqa: F401
 
-_LAZY = ("SpecEngine", "StreamState")
+# kv_cache imports jax too (snapshot selection), so the paged-cache names
+# stay lazy alongside the engine
+_LAZY = ("SpecEngine", "StreamState", "PagedKVCache", "PagePoolExhausted")
 
 
 def __getattr__(name):
-    if name in _LAZY:
+    if name in ("SpecEngine", "StreamState"):
         from . import spec_engine
         return getattr(spec_engine, name)
+    if name in ("PagedKVCache", "PagePoolExhausted"):
+        from . import kv_cache
+        return getattr(kv_cache, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

@@ -11,7 +11,12 @@ draft-then-verify compute differs between
     batch-verifying on model weights (Fig. 3 empirical curves, serving).
 
 Benchmarks and tests swap compute by passing a different backend — protocol
-code is untouched.
+code is untouched.  Backends may optionally expose three lifecycle hooks the
+cell calls around admission:
+
+  * ``bind(requests)``      — requests were admitted (map them to compute rows)
+  * ``can_admit(request)``  — admission-control predicate (page-pool capacity)
+  * ``release(requests)``   — requests retired or left (return their memory)
 """
 
 from __future__ import annotations
@@ -61,25 +66,72 @@ class SyntheticBackend:
 class EngineBackend:
     """Real-model verification through a ``repro.serving.SpecEngine``.
 
-    The engine batch is fixed at ``start()`` time (B streams); the backend
-    maps request ids onto engine rows in admission order (the cell calls
-    ``bind`` as requests are admitted, matching ``start()`` prompt order;
-    unbound requests fall back to first-seen order).  Rows whose
-    request is not in this call's active set (retired, or the off half of a
-    pipelined schedule) ride through the batched forward frozen: they
-    commit nothing and their positions do not advance, so engine stream
-    content always matches the cell's per-request accounting.
+    Requests map onto engine rows in admission order (the cell calls
+    ``bind`` as requests are admitted).  The first B requests take the B
+    streams prefilled by ``engine.start()``; with a PAGED engine every later
+    request is admitted dynamically — ``engine.add_streams`` prefills its
+    prompt into pooled pages (recycling retired rows first) — and
+    ``can_admit`` gates the cell's admission on true page-pool capacity.
+    Contiguous engines keep the legacy hard limit: through the cell, over-
+    batch requests are REJECTED at admission (``servable`` False ->
+    ``cell.rejected``); binding one directly still raises.
+
+    Rows whose request is not in this call's active set (retired, or the
+    off half of a pipelined schedule) ride through the batched forward
+    frozen: they commit nothing and their positions do not advance, so
+    engine stream content always matches the cell's per-request accounting.
+    ``release`` returns the pages of retired/left requests to the pool.
+
+    ``admit_headroom`` is the token slack reserved beyond the prompt when
+    answering ``can_admit`` — one verification window's worth, so a stream
+    admitted this round cannot OOM the pool on its first spin.
     """
 
-    def __init__(self, engine, state, vhat: int = 64):
+    def __init__(self, engine, state, vhat: int = 64,
+                 admit_headroom: int = 32):
         self.engine = engine
         self.state = state
         self.vhat = vhat
+        self.admit_headroom = admit_headroom
         self._row_of: dict[int, int] = {}
+        self._start_rows = int(state.pending.shape[0])
+        self._next_start_row = 0
 
     @property
     def batch_size(self) -> int:
         return int(self.state.pending.shape[0])
+
+    @property
+    def dynamic(self) -> bool:
+        return getattr(self.engine, "cache_kind", "contiguous") == "paged"
+
+    # -- lifecycle hooks (called by the cell) ---------------------------
+
+    def servable(self, request) -> bool:
+        """Whether the request can EVER run on this engine.  The cell evicts
+        unservable requests (into ``cell.rejected``, done=True) — they must
+        not sit in the FIFO forever.  Paged: the prompt plus one generated
+        token has to fit a stream.  Contiguous: rows are never freed, so a
+        request beyond the start batch can never be served (the legacy code
+        raised 'engine batch exhausted' here; rejection keeps the signal
+        loud without killing the cell's other streams)."""
+        if not self.dynamic:
+            return (request.rid in self._row_of
+                    or self._next_start_row < self._start_rows)
+        return self._prompt_len(request) + 1 <= self.engine.max_len
+
+    def can_admit(self, request) -> bool:
+        """True while start() streams remain unbound; afterwards defer to
+        the engine's page pools (contiguous engines are full at that point).
+        The capacity ask is clamped to the stream ceiling so near-max_len
+        prompts are judged by what they can actually occupy."""
+        if self._next_start_row < self._start_rows:
+            return True
+        if not self.dynamic:
+            return False
+        length = min(self._prompt_len(request) + self.admit_headroom,
+                     self.engine.max_len)
+        return self.engine.can_admit(length)
 
     def bind(self, requests: Sequence) -> None:
         """Pre-register engine rows for ``requests`` in admission order.
@@ -91,15 +143,52 @@ class EngineBackend:
         for r in requests:
             self._row(r)
 
+    def release(self, requests: Sequence) -> None:
+        """Hand the engine rows of retired/departed requests back: their
+        pages return to the pool and the rows become recyclable."""
+        if not self.dynamic:
+            return
+        for r in requests:
+            row = self._row_of.pop(r.rid, None)
+            if row is not None:
+                self.engine.retire_stream(row)
+
+    # -- row mapping ----------------------------------------------------
+
+    def _prompt_len(self, r) -> int:
+        if getattr(r, "prompt", None) is not None:
+            return len(r.prompt)
+        return max(int(r.prompt_len), 2)
+
+    def _prompt_tokens(self, r):
+        """The request's prompt, or a deterministic synthetic one (analytic
+        callers describe devices by ``prompt_len`` only)."""
+        import jax
+
+        if getattr(r, "prompt", None) is not None:
+            import jax.numpy as jnp
+            return jnp.asarray(list(r.prompt), jnp.int32)
+        vocab = self.engine.target_cfg.vocab_size
+        return jax.random.randint(jax.random.PRNGKey(r.rid ^ 0x5eed),
+                                  (self._prompt_len(r),), 0, vocab)
+
     def _row(self, r) -> int:
         if r.rid not in self._row_of:
-            nxt = len(self._row_of)
-            if nxt >= self.batch_size:
+            if self._next_start_row < self._start_rows:
+                self._row_of[r.rid] = self._next_start_row
+                self._next_start_row += 1
+            elif self.dynamic:
+                self.state, rows = self.engine.add_streams(
+                    self.state, self._prompt_tokens(r)[None, :])
+                self._row_of[r.rid] = rows[0]
+            else:
                 raise ValueError(
-                    f"engine batch exhausted: {self.batch_size} streams, "
-                    f"cannot map new request rid={r.rid}")
-            self._row_of[r.rid] = nxt
+                    f"engine batch exhausted: {self.batch_size} contiguous "
+                    f"streams, cannot map new request rid={r.rid} "
+                    "(cache_kind='paged' serves churn)")
         return self._row_of[r.rid]
+
+    # -- the verification step ------------------------------------------
 
     def verify(self, lengths: np.ndarray, requests: Sequence,
                rng: np.random.Generator, key=None,
@@ -108,9 +197,10 @@ class EngineBackend:
 
         lengths = np.asarray(lengths, dtype=np.int64)
         rows = [self._row(r) for r in requests]
-        full = np.ones(self.batch_size, dtype=np.int64)
+        B = self.batch_size
+        full = np.ones(B, dtype=np.int64)
         full[rows] = lengths
-        freeze = np.ones(self.batch_size, dtype=bool)
+        freeze = np.ones(B, dtype=bool)
         freeze[rows] = False
         if mask is not None:
             # deadline-dropped devices report nothing this round: their

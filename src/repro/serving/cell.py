@@ -19,10 +19,10 @@ Construction is one ``CellConfig`` (JSON-serializable) and one call::
     rec = cell.step()          # one protocol round
     print(cell.summary())
 
-Unlike the legacy ``MultiSpinProtocol`` (now a shim over this class), the
-device list is never frozen: every round plans against the scheduler's
-CURRENT active set, so retirements, joins, and drops can never diverge
-from the controller's view.
+Unlike the legacy ``MultiSpinProtocol`` (removed after its one-PR
+migration window), the device list is never frozen: every round plans
+against the scheduler's CURRENT active set, so retirements, joins, and
+drops can never diverge from the controller's view.
 """
 
 from __future__ import annotations
@@ -148,6 +148,7 @@ class MultiSpinCell:
         self.gains = np.zeros(0)
         self.rates = np.zeros(0)
         self.history: list[RoundRecord] = []
+        self.rejected: list[Request] = []   # permanently-unservable requests
         self._round_idx = 0
         self._pending_ver = 0.0      # pipelined: verification still in flight
         self._pending_rids: set[int] = set()   # whose tokens it verifies
@@ -165,12 +166,25 @@ class MultiSpinCell:
 
     def admit(self) -> list[Request]:
         """Fill free batch slots; provision channel + estimator rows for the
-        devices that just joined.  Called automatically by ``step``."""
+        devices that just joined.  Called automatically by ``step``.
+
+        Backends with an ``can_admit`` hook (the paged engine) gate
+        admission on true memory capacity: a join is refused only when the
+        page pool cannot hold the request — it then waits in the queue."""
         # config.max_batch is the single source of truth for capacity (it can
         # be resized at runtime); the scheduler just mirrors it
         self.scheduler.max_batch = self.config.max_batch
         before = len(self.scheduler.active)
-        active = self.scheduler.admit()
+        # bind as each request is admitted (not after the loop) so every
+        # can_admit query sees the capacity its predecessors consumed;
+        # requests that can NEVER be served are evicted into self.rejected
+        # rather than wedging the FIFO
+        bind = getattr(self.backend, "bind", None)
+        active = self.scheduler.admit(
+            can_admit=getattr(self.backend, "can_admit", None),
+            on_admit=(lambda r: bind([r])) if bind is not None else None,
+            servable=getattr(self.backend, "servable", None),
+            on_reject=self.rejected.append)
         n_new = len(active) - before
         if n_new:
             new_avg = sample_average_gains(self.config.channel, n_new, self.rng)
@@ -180,9 +194,6 @@ class MultiSpinCell:
             self.rates = spectrum_efficiency(self.config.channel, self.gains)
             if self.estimator is not None:
                 self.estimator.extend(n_new)
-            bind = getattr(self.backend, "bind", None)
-            if bind is not None:
-                bind(active[before:])
         return active
 
     def leave(self, rid: int) -> Request:
@@ -197,7 +208,15 @@ class MultiSpinCell:
         keep = np.ones(len(self.scheduler.active) + 1, dtype=bool)
         keep[idx] = False
         self._drop_rows(keep)
+        self._release([req])
         return req
+
+    def _release(self, done: list[Request]):
+        """Hand retired/departed requests back to the backend (paged engines
+        return their streams' pages to the pool)."""
+        release = getattr(self.backend, "release", None)
+        if done and release is not None:
+            release(done)
 
     def _drop_rows(self, keep: np.ndarray):
         """Splice out the channel + estimator rows of departing devices."""
@@ -214,6 +233,7 @@ class MultiSpinCell:
         keep = np.array([not r.done for r in active_reqs], dtype=bool)
         if not keep.all():
             self._drop_rows(keep)
+            self._release([r for r in active_reqs if r.done])
 
     # ------------------------------------------------------------------
     # channel + planning view
@@ -253,6 +273,19 @@ class MultiSpinCell:
     # the round loop
     # ------------------------------------------------------------------
 
+    def _deadline_mask(self, per_dev_lat: np.ndarray) -> np.ndarray:
+        """Straggler masking, identical for both schedules: devices whose
+        draft+upload exceeds ``deadline_factor`` x the (participating-set)
+        median are dropped from this round's verification.  All-dropped
+        degenerates to all-kept (the round must produce something)."""
+        active = np.ones(len(per_dev_lat), dtype=bool)
+        if self.config.deadline_factor is not None:
+            deadline = self.config.deadline_factor * np.median(per_dev_lat)
+            active = per_dev_lat <= deadline
+            if not active.any():
+                active[:] = True
+        return active
+
     def step(self, key=None) -> RoundRecord | None:
         """Run one protocol round (or one pipelined half-round).  Returns
         ``None`` when the cell is idle (no queued or active requests)."""
@@ -287,12 +320,7 @@ class MultiSpinCell:
         # --- steps 2-3: drafting + upload latency (straggler-limited) ---
         per_dev_lat = lengths * (t_slm + self.controller.q_tok_bits
                                  / np.maximum(bandwidth * self.rates, 1e-9))
-        active = np.ones(K, dtype=bool)
-        if self.config.deadline_factor is not None:
-            deadline = self.config.deadline_factor * np.median(per_dev_lat)
-            active = per_dev_lat <= deadline
-            if not active.any():
-                active[:] = True
+        active = self._deadline_mask(per_dev_lat)
         t_ma = float(np.max(per_dev_lat[active]))
 
         # --- step 4: batched verification (pluggable backend) ---
@@ -347,7 +375,10 @@ class MultiSpinCell:
         bandwidth_h = np.asarray(plan.bandwidth, dtype=np.float64)
         per_dev = lengths_h * (t_slm_all[h] + self.controller.q_tok_bits
                                / np.maximum(bandwidth_h * self.rates[h], 1e-9))
-        t_ma = float(np.max(per_dev))
+        # straggler masking within the half — same policy as the sync
+        # schedule (this previously ignored deadline_factor entirely)
+        ok_h = self._deadline_mask(per_dev)
+        t_ma = float(np.max(per_dev[ok_h]))
         h_rids = {active_reqs[j].rid for j in h}
         if self._pending_rids & h_rids:
             # a device in this half still awaits its own verification
@@ -357,17 +388,23 @@ class MultiSpinCell:
         else:
             # overlap with the OTHER half's verification still in flight
             step_time = max(t_ma, self._pending_ver)
+        # like the sync schedule, verification is billed for the deadline
+        # SURVIVORS only (dropped devices uploaded nothing to verify)
         t_ver = float(plan.meta.get("t_ver",
-                                    self.controller.t_ver_model(len(h))))
+                                    self.controller.t_ver_model(
+                                        int(ok_h.sum()))))
         self._pending_ver = t_ver
         self._pending_rids = h_rids
 
         accepted_h = np.asarray(
             self.backend.verify(lengths_h, [active_reqs[j] for j in h],
-                                self.rng, key=key), dtype=np.int64)
+                                self.rng, key=key, mask=ok_h), dtype=np.int64)
+        accepted_h = np.where(ok_h, accepted_h, 0)
 
+        participated = np.zeros(K, dtype=bool)
+        participated[h] = True                 # drafted this half-round
         mask = np.zeros(K, dtype=bool)
-        mask[h] = True
+        mask[h] = ok_h                         # ... and met the deadline
         accepted = np.zeros(K, dtype=np.int64)
         accepted[h] = accepted_h
         lengths = np.zeros(K, dtype=np.int64)
@@ -388,7 +425,8 @@ class MultiSpinCell:
         )
         self.history.append(rec)
         self._round_idx += 1
-        self._retire(active_reqs, accepted, step_time, participated=mask)
+        self._retire(active_reqs, accepted, step_time,
+                     participated=participated)
         return rec
 
     # ------------------------------------------------------------------

@@ -1,10 +1,12 @@
 """Cache utilities for the serving runtime.
 
-Models own their cache layout (``init_cache`` / ``CACHE_BATCH_AXES``); this
-module adds the serving-level operations:
+Models own their cache layout (``init_cache`` / ``init_paged_cache`` /
+``CACHE_BATCH_AXES``); this module adds the serving-level operations:
 
   * snapshot selection — SSM-state rollback after speculative verification
   * byte accounting — admission control / placement decisions
+  * ``PagedKVCache`` — page allocator + per-stream page tables for serving a
+    *changing* stream population out of one preallocated pool
 """
 
 from __future__ import annotations
@@ -57,3 +59,162 @@ def needs_state_rollback(cfg) -> bool:
     """Whether the family carries recurrent state that speculative rejection
     must roll back (attention KV is rollback-free under position masking)."""
     return cfg.family in ("ssm", "hybrid")
+
+
+# ---------------------------------------------------------------------------
+# Paged KV-cache management
+# ---------------------------------------------------------------------------
+
+class PagePoolExhausted(RuntimeError):
+    """Raised when an allocation cannot be satisfied from the page pool.
+
+    Admission control is expected to query ``can_allocate`` / ``free_bytes``
+    BEFORE committing a stream, so in a well-behaved cell this only fires on
+    mid-round growth past the reservation headroom."""
+
+
+class PagedKVCache:
+    """Free-list page allocator with per-stream page tables.
+
+    The model owns the page *pool* (``init_paged_cache``: every attention
+    leaf shaped ``(layers, num_pages, page_size, KV, D)``); this manager owns
+    the *mapping*: which physical pages back which logical positions of which
+    stream.  All state is host-side numpy — the device-side view handed to
+    ``forward_window`` is just the ``(B, pages_per_stream)`` int32 page-table
+    slice for the rows in the batch (``-1`` marks unmapped slots; model-side
+    writes there are dropped and reads are masked).
+
+    Page-size tradeoff: small pages waste fewer slots per stream tail
+    (internal fragmentation ~ page_size/2 tokens per stream) but widen the
+    page table and the gather; large pages amortize gather indices but strand
+    more of the pool when streams are short.  Serving shapes here default to
+    16 tokens/page.
+    """
+
+    def __init__(self, num_pages: int, page_size: int,
+                 pages_per_stream: int, bytes_per_page: int = 0):
+        if num_pages <= 0 or page_size <= 0 or pages_per_stream <= 0:
+            raise ValueError("num_pages, page_size, pages_per_stream must be "
+                             "positive")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.pages_per_stream = int(pages_per_stream)
+        self.bytes_per_page = int(bytes_per_page)
+        # LIFO free list: recently-returned (hot) pages are reused first
+        self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        self._tables: dict[int, list[int]] = {}   # stream -> physical pages
+        self._lengths: dict[int, int] = {}        # stream -> valid token count
+
+    # -- capacity queries ----------------------------------------------------
+
+    @property
+    def num_free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_allocated_pages(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def pages_for(self, length: int) -> int:
+        """Pages needed to hold ``length`` tokens (0 tokens -> 0 pages)."""
+        return -(-max(int(length), 0) // self.page_size)
+
+    def can_allocate(self, length: int) -> bool:
+        """Whether a NEW stream of ``length`` tokens fits right now."""
+        need = self.pages_for(length)
+        return need <= min(len(self._free), self.pages_per_stream)
+
+    def free_bytes(self) -> int:
+        return len(self._free) * self.bytes_per_page
+
+    def used_bytes(self) -> int:
+        return self.num_allocated_pages * self.bytes_per_page
+
+    # -- stream lifecycle ----------------------------------------------------
+
+    def alloc_stream(self, stream: int, length: int) -> None:
+        """Map a new stream and reserve pages for its first ``length`` tokens."""
+        if stream in self._tables:
+            raise ValueError(f"stream {stream} already allocated")
+        self._tables[stream] = []
+        self._lengths[stream] = 0
+        try:
+            self.extend(stream, length)
+        except PagePoolExhausted:
+            self.free_stream(stream)
+            raise
+
+    def extend(self, stream: int, new_length: int) -> None:
+        """Grow ``stream``'s mapping to cover ``new_length`` tokens."""
+        table = self._tables[stream]
+        need = self.pages_for(new_length)
+        if need > self.pages_per_stream:
+            raise PagePoolExhausted(
+                f"stream {stream}: {new_length} tokens need {need} pages > "
+                f"pages_per_stream={self.pages_per_stream} (max_len)")
+        grow = need - len(table)
+        if grow > len(self._free):
+            raise PagePoolExhausted(
+                f"stream {stream}: need {grow} pages, pool has "
+                f"{len(self._free)} free of {self.num_pages}")
+        for _ in range(max(grow, 0)):
+            table.append(self._free.pop())
+        self._lengths[stream] = max(self._lengths[stream], int(new_length))
+
+    def truncate(self, stream: int, new_length: int) -> int:
+        """Shrink ``stream`` to ``new_length`` tokens, returning whole pages
+        past the new tail to the pool (speculative rejection: unused draft
+        pages simply come back).  Returns the number of pages freed."""
+        table = self._tables[stream]
+        keep = self.pages_for(new_length)
+        freed = 0
+        while len(table) > keep:
+            self._free.append(table.pop())
+            freed += 1
+        self._lengths[stream] = int(new_length)
+        return freed
+
+    def free_stream(self, stream: int) -> int:
+        """Unmap a stream entirely; every page returns to the pool."""
+        table = self._tables.pop(stream)
+        self._lengths.pop(stream)
+        self._free.extend(reversed(table))
+        return len(table)
+
+    # -- views ---------------------------------------------------------------
+
+    def streams(self) -> list[int]:
+        return sorted(self._tables)
+
+    def length(self, stream: int) -> int:
+        return self._lengths[stream]
+
+    def page_table(self, streams) -> np.ndarray:
+        """(len(streams), pages_per_stream) int32 physical-page table; -1
+        marks unmapped slots (writes dropped, reads masked).  Unknown streams
+        (retired rows still riding the batch) map to an all--1 row."""
+        out = np.full((len(streams), self.pages_per_stream), -1, np.int32)
+        for i, s in enumerate(streams):
+            pages = self._tables.get(s, ())
+            out[i, :len(pages)] = pages
+        return out
+
+    def check_invariants(self) -> None:
+        """Every page is either free or mapped exactly once (leak/double-free
+        detector for the allocator property tests)."""
+        mapped = [p for t in self._tables.values() for p in t]
+        seen = set(mapped) | set(self._free)
+        assert len(mapped) + len(self._free) == self.num_pages, \
+            f"leak: {len(mapped)} mapped + {len(self._free)} free != " \
+            f"{self.num_pages}"
+        assert len(seen) == self.num_pages, "page mapped twice or lost"
+
+
+def paged_pool_bytes_per_page(pool) -> int:
+    """Bytes one physical page costs across every leaf/layer of a paged pool
+    (leaves shaped (layers, num_pages, page_size, ...))."""
+    total = 0
+    for leaf in jax.tree.leaves(pool):
+        num_pages = leaf.shape[1]
+        total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize // num_pages
+    return total

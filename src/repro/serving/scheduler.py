@@ -24,6 +24,8 @@ class Request:
     task: str = ""
     alpha: float = 0.8            # task-profile acceptance estimate
     T_S: float = 0.03             # device compute speed
+    prompt: tuple | None = None   # prompt tokens (engine-backed admission
+                                  # after start(); None -> synthetic prompt)
     generated: int = 0
     rounds: int = 0
     done: bool = False
@@ -57,10 +59,35 @@ class RoundScheduler:
         req.submit_time = self.clock
         self.queue.append(req)
 
-    def admit(self) -> list[Request]:
-        """Fill free batch slots from the queue; returns the active set."""
+    def admit(self, can_admit=None, on_admit=None, servable=None,
+              on_reject=None) -> list[Request]:
+        """Fill free batch slots from the queue; returns the active set.
+
+        ``can_admit`` (when given) is the backend's admission-control
+        predicate — e.g. page-pool capacity.  Admission stays FIFO: a
+        capacity-blocked head request waits at the front rather than being
+        jumped, so a large request cannot starve behind a stream of small
+        ones.  A head that can NEVER be served (``servable(req)`` False —
+        prompt longer than the engine's max stream length, or a contiguous
+        batch with no rows left) is evicted instead: marked done and handed
+        to ``on_reject`` — it must not wedge the FIFO forever.  ``on_admit``
+        fires per admitted request BEFORE the next capacity query, so each
+        admission consumes its backend resources (page allocation) and
+        ``can_admit`` always sees the true remainder."""
         while len(self.active) < self.max_batch and self.queue:
+            head = self.queue[0]
+            if servable is not None and not servable(head):
+                self.queue.popleft()
+                head.done = True
+                head.finish_time = self.clock
+                if on_reject is not None:
+                    on_reject(head)
+                continue
+            if can_admit is not None and not can_admit(head):
+                break
             self.active.append(self.queue.popleft())
+            if on_admit is not None:
+                on_admit(head)
         return self.active
 
     def device_profiles(self):

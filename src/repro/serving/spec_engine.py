@@ -12,7 +12,17 @@ round (paper Fig. 2):
   5. state update   — pointer arithmetic for attention caches; snapshot
                        rollback for SSM state
 
-The engine is deliberately network-free: the protocol layer wraps it with the
+Two cache layouts:
+
+  * ``cache_kind="contiguous"`` — the classic (B, max_len) slabs fixed at
+    ``start()``; the stream population can never change.
+  * ``cache_kind="paged"``      — both models' KV lives in fixed-size pages
+    of a preallocated pool (``PagedKVCache``); streams may join after
+    ``start()`` (``add_streams``) and leave (``retire_stream``), rejected
+    speculative tokens return their pages each round, and admission is
+    bounded only by the page pool (``can_admit``).
+
+The engine is deliberately network-free: the cell layer wraps it with the
 channel/latency model to produce goodput numbers.
 """
 
@@ -29,7 +39,17 @@ from repro.core.drafting import generate_drafts
 from repro.core.verification import VerifyResult, verify_drafts
 from repro.models import build_model
 
-from .kv_cache import merge_snapshot_into_cache, needs_state_rollback, select_snapshots
+from .kv_cache import (
+    PagedKVCache,
+    PagePoolExhausted,
+    cache_bytes,
+    merge_snapshot_into_cache,
+    needs_state_rollback,
+    paged_pool_bytes_per_page,
+    select_snapshots,
+)
+
+CACHE_KINDS = ("contiguous", "paged")
 
 
 @dataclasses.dataclass
@@ -44,17 +64,34 @@ class StreamState:
 
 class SpecEngine:
     def __init__(self, target_cfg: ModelConfig, draft_cfg: ModelConfig,
-                 max_len: int = 512, cache_dtype=jnp.float32):
+                 max_len: int = 512, cache_dtype=jnp.float32,
+                 cache_kind: str = "contiguous", page_size: int = 16,
+                 num_pages: int | None = None):
         assert target_cfg.vocab_size == draft_cfg.vocab_size, \
             "SLM/LLM pair must share a vocabulary"
+        if cache_kind not in CACHE_KINDS:
+            raise ValueError(f"cache_kind must be one of {CACHE_KINDS}")
+        if cache_kind == "paged" and (needs_state_rollback(target_cfg)
+                                      or needs_state_rollback(draft_cfg)):
+            raise NotImplementedError(
+                "paged caches cover attention KV only; SSM/hybrid recurrent "
+                "state is O(1) per stream and needs no paging (ROADMAP)")
         self.target_cfg = target_cfg
         self.draft_cfg = draft_cfg
         self.target = build_model(target_cfg)
         self.draft = build_model(draft_cfg)
         self.max_len = max_len
         self.cache_dtype = cache_dtype
+        self.cache_kind = cache_kind
+        self.page_size = int(page_size)
+        self.pages_per_stream = -(-max_len // self.page_size)
+        self.num_pages = num_pages
         self.t_params = None
         self.d_params = None
+        self.t_pages: PagedKVCache | None = None
+        self.d_pages: PagedKVCache | None = None
+        self._free_rows: list[int] = []
+        self._retired: set[int] = set()
 
     # ------------------------------------------------------------------
 
@@ -66,8 +103,33 @@ class SpecEngine:
 
     def start(self, prompts: jax.Array) -> StreamState:
         """Prefill both models on the prompts (B, M).  The last prompt token
-        becomes the pending token (its logits seed round 1)."""
+        becomes the pending token (its logits seed round 1).
+
+        Paged engines size the pool here when ``num_pages`` was not given:
+        2x the pages the start batch needs at max_len, so churn has headroom
+        by default."""
         B, M = prompts.shape
+        self._free_rows, self._retired = [], set()
+        if self.cache_kind == "paged":
+            if self.num_pages is None:
+                self.num_pages = 2 * B * self.pages_per_stream
+            self.t_cache = self.target.init_paged_cache(
+                self.num_pages, self.page_size, self.cache_dtype)
+            self.d_cache = self.draft.init_paged_cache(
+                self.num_pages, self.page_size, self.cache_dtype)
+            self.t_pages = PagedKVCache(
+                self.num_pages, self.page_size, self.pages_per_stream,
+                paged_pool_bytes_per_page(self.t_cache))
+            self.d_pages = PagedKVCache(
+                self.num_pages, self.page_size, self.pages_per_stream,
+                paged_pool_bytes_per_page(self.d_cache))
+            state = StreamState(
+                pending=jnp.zeros((0,), prompts.dtype),
+                target_pos=jnp.zeros((0,), jnp.int32),
+                draft_pos=jnp.zeros((0,), jnp.int32),
+                committed=[])
+            state, _ = self.add_streams(state, prompts)
+            return state
         self.t_cache = self.target.init_cache(B, self.max_len, self.cache_dtype)
         self.d_cache = self.draft.init_cache(B, self.max_len, self.cache_dtype)
         _, self.t_cache, _ = self.target.prefill(self.t_params, prompts[:, :-1],
@@ -82,6 +144,117 @@ class SpecEngine:
         )
 
     # ------------------------------------------------------------------
+    # dynamic stream admission (paged only)
+    # ------------------------------------------------------------------
+
+    def can_admit(self, length: int) -> bool:
+        """Whether BOTH page pools can map a new stream of ``length`` tokens
+        right now — the admission-control predicate (OOM-safe: pure query)."""
+        if self.cache_kind != "paged":
+            return False
+        return (self.t_pages.can_allocate(length)
+                and self.d_pages.can_allocate(length))
+
+    def pool_stats(self) -> dict:
+        """Byte-level accounting for placement / admission decisions."""
+        if self.cache_kind != "paged":
+            return {"cache_bytes": cache_bytes(self.t_cache)
+                    + cache_bytes(self.d_cache)}
+        return {
+            "cache_bytes": cache_bytes(self.t_cache) + cache_bytes(self.d_cache),
+            "free_bytes": self.t_pages.free_bytes() + self.d_pages.free_bytes(),
+            "used_bytes": self.t_pages.used_bytes() + self.d_pages.used_bytes(),
+            "free_pages": min(self.t_pages.num_free_pages,
+                              self.d_pages.num_free_pages),
+        }
+
+    def add_streams(self, state: StreamState, prompts: jax.Array):
+        """Admit ``prompts`` (n, M) as new streams AFTER ``start()``.
+
+        Retired batch rows are recycled first; otherwise the batch grows.
+        Pages are allocated from the pool (``PagePoolExhausted`` when it is
+        truly out of memory — call ``can_admit`` first).  Returns
+        ``(new_state, rows)`` with the engine rows assigned in order."""
+        if self.cache_kind != "paged":
+            raise RuntimeError(
+                "contiguous caches are fixed at start(); construct the "
+                "engine with cache_kind='paged' to serve churn")
+        n, M = prompts.shape
+        B = state.pending.shape[0]
+        rows = []
+        for _ in range(n):
+            row = self._free_rows.pop(0) if self._free_rows else B + len(
+                [r for r in rows if r >= B])
+            rows.append(row)
+        allocated = []
+        try:
+            for row in rows:
+                self.t_pages.alloc_stream(row, M - 1)
+                allocated.append((self.t_pages, row))
+                self.d_pages.alloc_stream(row, M - 1)
+                allocated.append((self.d_pages, row))
+        except Exception:
+            for mgr, row in allocated:
+                mgr.free_stream(row)
+            self._free_rows = sorted(set(self._free_rows)
+                                     | {r for r in rows if r < B})
+            raise
+        self._retired -= set(rows)
+
+        # prefill ONLY the new rows; their pages view writes into the pools
+        t_view = dict(self.t_cache,
+                      pages=jnp.asarray(self.t_pages.page_table(rows)))
+        d_view = dict(self.d_cache,
+                      pages=jnp.asarray(self.d_pages.page_table(rows)))
+        _, t_view, _ = self.target.prefill(self.t_params, prompts[:, :-1],
+                                           t_view)
+        _, d_view, _ = self.draft.prefill(self.d_params, prompts[:, :-1],
+                                          d_view)
+        self.t_cache = {k: v for k, v in t_view.items() if k != "pages"}
+        self.d_cache = {k: v for k, v in d_view.items() if k != "pages"}
+
+        # splice the new rows into the batched state
+        n_grow = max(0, max(r + 1 for r in rows) - B) if rows else 0
+        pending = np.concatenate([np.asarray(state.pending),
+                                  np.zeros(n_grow, np.asarray(prompts).dtype)])
+        tpos = np.concatenate([np.asarray(state.target_pos),
+                               np.zeros(n_grow, np.int32)])
+        dpos = np.concatenate([np.asarray(state.draft_pos),
+                               np.zeros(n_grow, np.int32)])
+        committed = list(state.committed) + [None] * n_grow
+        pnp = np.asarray(prompts)
+        for i, row in enumerate(rows):
+            pending[row] = pnp[i, -1]
+            tpos[row] = dpos[row] = M - 1
+            committed[row] = list(pnp[i])
+        new_state = StreamState(pending=jnp.asarray(pending),
+                                target_pos=jnp.asarray(tpos, jnp.int32),
+                                draft_pos=jnp.asarray(dpos, jnp.int32),
+                                committed=committed)
+        return new_state, rows
+
+    def retire_stream(self, row: int) -> None:
+        """Return every page of ``row`` to the pool and recycle the batch
+        slot.  The row keeps riding batched forwards frozen (writes through
+        its emptied page table are dropped) until a new stream reuses it."""
+        if self.cache_kind != "paged":
+            raise RuntimeError("contiguous engines cannot retire streams")
+        if row in self._retired:
+            return
+        self.t_pages.free_stream(row)
+        self.d_pages.free_stream(row)
+        self._retired.add(row)
+        self._free_rows.append(row)
+        self._free_rows.sort()
+
+    # ------------------------------------------------------------------
+
+    def _paged_views(self, B: int):
+        """Per-round cache views: pools + page tables for rows [0, B)."""
+        rows = range(B)
+        t = dict(self.t_cache, pages=jnp.asarray(self.t_pages.page_table(rows)))
+        d = dict(self.d_cache, pages=jnp.asarray(self.d_pages.page_table(rows)))
+        return t, d
 
     def spin_round(self, state: StreamState, lengths: np.ndarray,
                    key: jax.Array, vhat: int = 64,
@@ -96,12 +269,17 @@ class SpecEngine:
         committed text are untouched.  For attention targets/drafts the
         cache is pointer-indexed, so the stale window writes are overwritten
         on the row's next live round; SSM targets would need a pre-window
-        state restore and are rejected.
+        state restore and are rejected.  Paged engines additionally freeze
+        retired rows and grow/shrink page mappings around the round: live
+        rows extend to cover the L+1 window up front and hand back every
+        page past the accepted prefix afterwards.
         """
         B = state.pending.shape[0]
         lengths = np.asarray(lengths, dtype=np.int64)
         frz_np = (np.zeros(B, dtype=bool) if freeze is None
-                  else np.asarray(freeze, dtype=bool))
+                  else np.asarray(freeze, dtype=bool).copy())
+        if self._retired:
+            frz_np[list(self._retired)] = True
         if frz_np.any() and needs_state_rollback(self.target_cfg):
             raise NotImplementedError(
                 "freezing streams of an SSM/hybrid target needs a pre-window "
@@ -109,23 +287,49 @@ class SpecEngine:
         L = int(lengths.max())
         k_draft, k_verify = jax.random.split(key)
 
+        paged = self.cache_kind == "paged"
+        if paged:
+            tpos_np = np.asarray(state.target_pos)
+            dpos_np = np.asarray(state.draft_pos)
+            # growth is clamped at the stream ceiling (window writes past
+            # max_len drop — the contiguous slab's semantics) and atomic: a
+            # pool-dry failure rolls every row back so the round leaves the
+            # mappings untouched
+            cap = self.pages_per_stream * self.page_size
+            grown: list[tuple[int, int, int]] = []
+            try:
+                for b in range(B):
+                    if frz_np[b]:
+                        continue
+                    grown.append((b, self.t_pages.length(b),
+                                  self.d_pages.length(b)))
+                    self.t_pages.extend(b, min(int(tpos_np[b]) + L + 1, cap))
+                    self.d_pages.extend(b, min(int(dpos_np[b]) + L + 1, cap))
+            except PagePoolExhausted:
+                for b, t_len, d_len in grown:
+                    self.t_pages.truncate(b, t_len)
+                    self.d_pages.truncate(b, d_len)
+                raise
+            t_cache, d_cache = self._paged_views(B)
+        else:
+            t_cache, d_cache = self.t_cache, self.d_cache
+
         # --- step 2: distributed drafting (SLM) ---
-        d_snap = self.d_cache if needs_state_rollback(self.draft_cfg) else None
-        draft_res = generate_drafts(self.draft, self.d_params, self.d_cache,
+        draft_res = generate_drafts(self.draft, self.d_params, d_cache,
                                     state.pending, state.draft_pos, L,
                                     k_draft, vhat=vhat)
-        self.d_cache = draft_res.cache
+        d_cache = draft_res.cache
 
         # --- step 4: batched verification (LLM) ---
         window = jnp.concatenate([state.pending[:, None], draft_res.tokens],
                                  axis=1)                       # (B, L+1)
         if needs_state_rollback(self.target_cfg):
             logits, t_cache, snaps = self.target.forward_window(
-                self.t_params, window, self.t_cache, state.target_pos,
+                self.t_params, window, t_cache, state.target_pos,
                 return_snapshots=True)
         else:
             logits, t_cache = self.target.forward_window(
-                self.t_params, window, self.t_cache, state.target_pos)
+                self.t_params, window, t_cache, state.target_pos)
             snaps = None
 
         draft_len = jnp.asarray(lengths, jnp.int32)
@@ -140,7 +344,8 @@ class SpecEngine:
             sel = select_snapshots(snaps, res.accept_counts,
                                    self.target.CACHE_BATCH_AXES)
             t_cache = merge_snapshot_into_cache(t_cache, sel)
-        self.t_cache = t_cache
+        self.t_cache = {k: v for k, v in t_cache.items() if k != "pages"} \
+            if paged else t_cache
 
         # draft cache: processed [pending, d_1..d_{L-1}]; valid prefix for row
         # b is pending + n accepted drafts. SSM draft state rolls back via
@@ -149,6 +354,8 @@ class SpecEngine:
             raise NotImplementedError(
                 "SSM draft models need snapshot drafting; assigned pairs use "
                 "attention SLMs (DESIGN.md §Arch-applicability)")
+        self.d_cache = {k: v for k, v in d_cache.items() if k != "pages"} \
+            if paged else d_cache
 
         frz = jnp.asarray(frz_np)
         adv = jnp.where(frz, 0, 1 + res.accept_counts)
@@ -163,6 +370,14 @@ class SpecEngine:
         for b in range(B):
             if not frz_np[b]:
                 state.committed[b].extend(out_np[b, :n_np[b] + 1].tolist())
+
+        if paged:
+            # speculative rejection hands pages straight back to the pool
+            ntp, ndp = np.asarray(new_target_pos), np.asarray(new_draft_pos)
+            for b in range(B):
+                if not frz_np[b]:
+                    self.t_pages.truncate(b, int(ntp[b]))
+                    self.d_pages.truncate(b, int(ndp[b]))
 
         new_state = StreamState(pending=new_pending, target_pos=new_target_pos,
                                 draft_pos=new_draft_pos,

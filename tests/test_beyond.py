@@ -75,31 +75,29 @@ def test_pipelined_period_formula():
     assert pipe["period"] >= 0.4 - 1e-9
 
 
-def test_protocol_pipelined_and_packed_schemes():
-    """Protocol-level integration: pipelined schedule and the hete-packed
+def test_cell_pipelined_and_packed_schemes():
+    """Cell-level integration: the pipelined schedule and the hete-packed
     controller must both beat the synchronous paper baseline on realized
     (simulated) goodput."""
-    from repro.core.channel import ChannelConfig
-    from repro.core.controller import MultiSpinController, VerificationLatencyModel
-    from repro.core.protocol import DeviceProfile, MultiSpinProtocol
+    from repro.api import CellConfig, MultiSpinCell, Request
 
     rng = np.random.default_rng(0)
     K = 12
-    devices = [DeviceProfile(T_S=0.009 * f, alpha=a)
-               for f, a in zip(rng.uniform(0.85, 1.15, K),
-                               rng.choice([0.71, 0.74, 0.86, 0.93], K))]
-    cfg = ChannelConfig()
+    profiles = list(zip(rng.uniform(0.85, 1.15, K),
+                        rng.choice([0.71, 0.74, 0.86, 0.93], K)))
 
-    def proto(scheme):
-        ctrl = MultiSpinController(
-            scheme=scheme, q_tok_bits=cfg.q_tok_bits,
-            bandwidth_hz=cfg.total_bandwidth_hz,
-            t_ver_model=VerificationLatencyModel(0.035, 0.0177), L_max=25)
-        return MultiSpinProtocol(ctrl, cfg, devices, np.random.default_rng(1))
+    def cell(scheme, schedule="sync"):
+        cfg = CellConfig(scheme=scheme, t_ver_fix=0.035, t_ver_lin=0.0177,
+                         L_max=25, max_batch=K, schedule=schedule, seed=1)
+        c = MultiSpinCell(cfg, rng=np.random.default_rng(1))
+        for i, (f, a) in enumerate(profiles):
+            c.submit(Request(rid=i, prompt_len=6, max_new_tokens=10 ** 12,
+                             alpha=float(a), T_S=0.009 * float(f)))
+        return c
 
-    sync = proto("hete").run(40)["goodput"]
-    packed = proto("hete-packed").run(40)["goodput"]
-    piped = proto("hete").run_pipelined(80)["goodput"]
+    sync = cell("hete").run(40)["goodput"]
+    packed = cell("hete-packed").run(40)["goodput"]
+    piped = cell("hete", schedule="pipelined").run(80)["goodput"]
     assert packed >= sync * 0.95          # never materially worse
     assert piped > sync                   # overlap wins
 

@@ -276,21 +276,37 @@ def test_backend_parity_accepted_token_accounting():
 
 
 # ---------------------------------------------------------------------------
-# Legacy shim
+# Legacy shim is gone (PR-1 migration window closed)
 # ---------------------------------------------------------------------------
 
-def test_protocol_shim_is_cell_backed():
-    from repro.core.channel import ChannelConfig as CC
-    from repro.core.protocol import DeviceProfile, MultiSpinProtocol
+def test_protocol_shim_removed():
+    with pytest.raises(ModuleNotFoundError):
+        import repro.core.protocol  # noqa: F401
+    with pytest.raises(AttributeError):
+        import repro.api
+        repro.api.MultiSpinProtocol  # noqa: B018
 
-    rng = np.random.default_rng(0)
-    devices = [DeviceProfile(T_S=0.01, alpha=0.8) for _ in range(4)]
-    ctrl = MultiSpinController(
-        scheme="hete", q_tok_bits=31744.0, bandwidth_hz=10e6,
-        t_ver_model=VerificationLatencyModel(0.035, 0.0177), L_max=12)
-    proto = MultiSpinProtocol(ctrl, CC(), devices, rng)
-    assert isinstance(proto.cell, MultiSpinCell)
-    assert proto.cell.controller is ctrl            # caller's instance honored
-    out = proto.run(5)
-    assert out["rounds"] == 5 and out["goodput"] > 0
-    assert len(proto.history) == 5
+
+def test_pipelined_schedule_honors_deadline_factor():
+    """The pipelined schedule must apply the same straggler masking as the
+    sync schedule (it previously ignored deadline_factor entirely): a 100x
+    straggler gets dropped from its half's verification and commits 0."""
+    cfg = CellConfig(scheme="fixed", L_fixed=6, max_batch=4,
+                     schedule="pipelined", deadline_factor=1.01, seed=0)
+    cell = MultiSpinCell(cfg)
+    for i in range(4):
+        cell.submit(_req(i, alpha=0.9, T_S=0.01 * (100.0 if i == 3 else 1.0)))
+    dropped = participated = 0
+    for _ in range(16):
+        rec = cell.step()
+        i3 = rec.rids.tolist().index(3)
+        half = rec.lengths > 0                    # planned this half-round
+        if half[i3]:
+            participated += 1
+            if not rec.active[i3]:
+                dropped += 1
+                assert rec.accepted[i3] == 0
+                # the straggler no longer gates the half's upload phase
+                assert rec.t_ma < 0.01 * 100 * rec.lengths[i3]
+    assert participated > 0
+    assert dropped == participated                # always over deadline

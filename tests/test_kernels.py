@@ -13,6 +13,7 @@ from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.gather_softmax_prob import gather_softmax_prob_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.residual_sample import residual_sample_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -75,6 +76,84 @@ def test_decode_attention_matches_ref(B, S, H, KV, D, bs, dtype):
     want = ref.decode_attention_ref(q, k, v, lengths)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# paged attention (decode / speculative-verification window)
+# ---------------------------------------------------------------------------
+
+def _random_page_table(rng, B, NP, P, ps, lengths, T):
+    """Page tables covering lengths + T - 1 positions from a shuffled pool
+    (non-contiguous physical pages, like a churned allocator)."""
+    pt = np.full((B, NP), -1, np.int32)
+    pool_pages = rng.permutation(P)
+    n = 0
+    for b in range(B):
+        need = -(-(int(lengths[b]) + T - 1) // ps)
+        pt[b, :need] = pool_pages[n:n + need]
+        n += need
+    return pt
+
+
+@pytest.mark.parametrize("B,T,H,KV,D,ps,P,NP", [
+    (2, 1, 4, 2, 64, 16, 24, 8),      # decode, GQA
+    (3, 5, 4, 1, 64, 16, 40, 6),      # verification window, MQA
+    (1, 3, 8, 4, 128, 32, 12, 4),     # MHA-ish, big pages
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_matches_ref(B, T, H, KV, D, ps, P, NP, dtype):
+    rng = np.random.default_rng(B * 10 + T)
+    ks = jax.random.split(jax.random.PRNGKey(B * 100 + T), 3)
+    q = jax.random.normal(ks[0], (B, T, H, D), dtype)
+    kp = jax.random.normal(ks[1], (P, ps, KV, D), dtype)
+    vp = jax.random.normal(ks[2], (P, ps, KV, D), dtype)
+    lengths = rng.integers(1, NP * ps - T + 1, B)
+    pt = _random_page_table(rng, B, NP, P, ps, lengths, T)
+    got = paged_attention_pallas(q, kp, vp, jnp.asarray(pt),
+                                 jnp.asarray(lengths), interpret=True)
+    want = ref.paged_attention_ref(q, kp, vp, jnp.asarray(pt),
+                                   jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_paged_attention_decode_equals_contiguous_decode():
+    """T=1 paged attention over a gathered view == the contiguous decode
+    oracle: paging must be a pure layout change."""
+    B, H, KV, D, ps, P, NP = 2, 4, 2, 64, 16, 24, 8
+    rng = np.random.default_rng(3)
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    kp = jax.random.normal(ks[1], (P, ps, KV, D))
+    vp = jax.random.normal(ks[2], (P, ps, KV, D))
+    lengths = rng.integers(1, NP * ps + 1, B)
+    pt = _random_page_table(rng, B, NP, P, ps, lengths, 1)
+    got = paged_attention_pallas(q, kp, vp, jnp.asarray(pt),
+                                 jnp.asarray(lengths), interpret=True)
+    kc = np.asarray(kp)[np.maximum(pt, 0)].reshape(B, NP * ps, KV, D)
+    vc = np.asarray(vp)[np.maximum(pt, 0)].reshape(B, NP * ps, KV, D)
+    want = ref.decode_attention_ref(q[:, 0], jnp.asarray(kc),
+                                    jnp.asarray(vc), jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_ops_dispatch(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    from repro.kernels import ops
+    rng = np.random.default_rng(5)
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    B, T, H, KV, D, ps, P, NP = 2, 2, 4, 2, 64, 16, 16, 4
+    q = jax.random.normal(ks[0], (B, T, H, D))
+    kp = jax.random.normal(ks[1], (P, ps, KV, D))
+    vp = jax.random.normal(ks[2], (P, ps, KV, D))
+    lengths = rng.integers(1, NP * ps - T + 1, B)
+    pt = _random_page_table(rng, B, NP, P, ps, lengths, T)
+    got = ops.paged_attention(q, kp, vp, jnp.asarray(pt), jnp.asarray(lengths))
+    want = ref.paged_attention_ref(q, kp, vp, jnp.asarray(pt),
+                                   jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -1,14 +1,13 @@
-"""Integration tests: the real-model speculative engine + round protocol."""
+"""Integration tests: the real-model speculative engine + the cell-level
+round protocol (ported off the removed ``MultiSpinProtocol`` shim)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import CellConfig, EngineBackend, MultiSpinCell, Request
 from repro.configs import get_config
-from repro.core.channel import ChannelConfig
-from repro.core.controller import MultiSpinController, VerificationLatencyModel
-from repro.core.protocol import DeviceProfile, MultiSpinProtocol
 from repro.models import build_model
 from repro.serving import SpecEngine
 
@@ -107,26 +106,28 @@ def test_engine_attention_target_incremental_consistency():
 
 
 # ---------------------------------------------------------------------------
-# Protocol-level integration
+# Cell-level integration (the paper's full protocol loop over the engine)
 # ---------------------------------------------------------------------------
 
-def _protocol(K=6, scheme="hete", engine=None, engine_state=None, **kw):
+def _cell(K=6, scheme="hete", backend=None, **cfg_kw):
+    """A cell over the shim's legacy device mixture: persistent devices
+    (never-retiring requests), heterogeneous alpha/T_S profiles."""
     rng = np.random.default_rng(0)
-    devices = [DeviceProfile(T_S=0.03 * f, alpha=a, task=t)
-               for f, a, t in zip(rng.uniform(0.85, 1.15, K),
-                                  rng.choice([0.71, 0.74, 0.74, 0.86], K),
-                                  ["squad", "gsm8k", "mtbench", "mbpp"] * K)]
-    cfg = ChannelConfig()
-    ctrl = MultiSpinController(
-        scheme=scheme, q_tok_bits=cfg.q_tok_bits, bandwidth_hz=cfg.total_bandwidth_hz,
-        t_ver_model=VerificationLatencyModel(0.03, 0.002), L_max=20)
-    return MultiSpinProtocol(ctrl, cfg, devices, rng, engine=engine,
-                             engine_state=engine_state, **kw)
+    cfg = CellConfig(scheme=scheme, t_ver_fix=0.03, t_ver_lin=0.002,
+                     L_max=20, max_batch=K, seed=0, **cfg_kw)
+    cell = MultiSpinCell(cfg, backend=backend, rng=rng)
+    speeds = rng.uniform(0.85, 1.15, K)
+    alphas = rng.choice([0.71, 0.74, 0.74, 0.86], K)
+    for i in range(K):
+        cell.submit(Request(rid=i, prompt_len=6, max_new_tokens=10 ** 12,
+                            alpha=float(alphas[i]), T_S=0.03 * float(speeds[i]),
+                            task=["squad", "gsm8k", "mtbench", "mbpp"][i % 4]))
+    cell.admit()
+    return cell
 
 
-def test_protocol_synthetic_rounds():
-    proto = _protocol(K=8)
-    out = proto.run(30)
+def test_cell_synthetic_rounds():
+    out = _cell(K=8).run(30)
     assert out["tokens"] > 0
     assert out["goodput"] > 0
     # realized goodput within 30% of analytic prediction over 30 rounds
@@ -134,41 +135,41 @@ def test_protocol_synthetic_rounds():
         / out["mean_predicted_goodput"] < 0.3
 
 
-def test_protocol_scheme_ordering():
-    results = {s: _protocol(K=10, scheme=s).run(40)["goodput"]
+def test_cell_scheme_ordering():
+    results = {s: _cell(K=10, scheme=s).run(40)["goodput"]
                for s in ("hete", "homo", "uni-bw", "fixed")}
     assert results["hete"] >= 0.95 * results["homo"]
     assert results["hete"] >= 0.95 * results["fixed"]
 
 
-def test_protocol_estimator_converges():
-    proto = _protocol(K=6, use_estimator=True)
-    proto.run(60)
-    true_alpha = np.array([d.alpha for d in proto.devices])
-    assert np.mean(np.abs(proto.estimator.alpha_hat - true_alpha)) < 0.12
+def test_cell_estimator_converges():
+    cell = _cell(K=6, use_estimator=True)
+    cell.run(60)
+    true_alpha = np.array([r.alpha for r in cell.scheduler.active])
+    assert np.mean(np.abs(cell.estimator.alpha_hat - true_alpha)) < 0.12
 
 
-def test_protocol_checkpoint_restore():
-    proto = _protocol(K=5)
-    proto.run(5)
-    snap = proto.state_dict()
-    g1 = proto.run(5)["goodput"]
-    proto2 = _protocol(K=5)
-    proto2.load_state_dict(snap)
-    assert proto2._round_idx == 5
-    np.testing.assert_allclose(proto2.channel.avg_gains, proto.channel.avg_gains)
+def test_cell_checkpoint_restore():
+    cell = _cell(K=5)
+    cell.run(5)
+    snap = cell.state_dict()
+    cell2 = _cell(K=5)
+    cell2.load_state_dict(snap)
+    assert cell2._round_idx == 5
+    np.testing.assert_allclose(cell2.channel.avg_gains,
+                               cell.channel.avg_gains)
 
 
-def test_protocol_device_dropout_and_deadline():
-    proto = _protocol(K=8, deadline_factor=1.5)
-    rec = proto.run_round()
+def test_cell_device_dropout_and_deadline():
+    cell = _cell(K=8, deadline_factor=1.5)
+    rec = cell.step()
     assert rec.active.sum() >= 1
-    proto.drop_device(0)
-    rec2 = proto.run_round()
+    cell.leave(int(rec.rids[0]))
+    rec2 = cell.step()
     assert len(rec2.lengths) == 7
 
 
-def test_protocol_with_real_engine():
+def test_cell_with_real_engine():
     tcfg = get_config("qwen2.5-3b").smoke()
     dcfg = tcfg.replace(num_layers=1, d_model=32, num_heads=2, num_kv_heads=1,
                         head_dim=16, d_ff=64, name="draft-smoke")
@@ -176,8 +177,8 @@ def test_protocol_with_real_engine():
     eng.init_params(jax.random.PRNGKey(0))
     K, M = 4, 6
     prompts = jax.random.randint(jax.random.PRNGKey(1), (K, M), 0, tcfg.vocab_size)
-    engine_state = eng.start(prompts)
-    proto = _protocol(K=K, engine=eng, engine_state=engine_state)
-    out = proto.run(4)
+    backend = EngineBackend(eng, eng.start(prompts))
+    cell = _cell(K=K, backend=backend)
+    out = cell.run(4)
     assert out["tokens"] >= 4 * K  # >= 1 token per device per round
-    assert all(len(c) > M for c in proto.engine_state.committed)
+    assert all(len(c) > M for c in backend.state.committed)
