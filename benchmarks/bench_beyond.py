@@ -5,7 +5,11 @@ Compares, at the paper's Fig-6 operating point and across K:
   packed     — token-budget T_ver + ragged packing (no zero-pad compute)
   pipelined  — two half-batches overlapping draft/upload with verification
   packed+pipe — both
+  multidraft — joint (L, J) optimum (J drafts per device, keep the longest)
 
+Every variant is a registered scheme planned through ``MultiSpinCell``
+(``cell_plan`` replays the recorded fading block; ``pipelined=True`` uses
+the cell's two-half-batch planner) — no solver is constructed directly.
 The baseline/packed comparison uses the SAME token-budget verifier with
 padded vs packed accounting, so the packing gain is not an artifact of the
 verifier refinement.
@@ -15,17 +19,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.beyond import (
-    TokenBudgetVerifier,
-    pipelined_goodput,
-    solve_heterogeneous_packed,
-    solve_heterogeneous_padded_tokenbudget,
-    solve_uniform_multidraft,
-)
 from repro.core.channel import ChannelState
-from repro.core.draft_control import solve_heterogeneous
 
-from .common import load_calibration, paper_channel, paper_devices
+from .common import cell_plan, load_calibration, paper_channel, paper_devices
 
 
 def run(fast: bool = True) -> list[dict]:
@@ -34,9 +30,7 @@ def run(fast: bool = True) -> list[dict]:
     for pair in ("llama2", "qwen35"):
         calib = load_calibration()[pair]
         cfg = paper_channel(pair)
-        Q, B = cfg.q_tok_bits, cfg.total_bandwidth_hz
-        verifier = TokenBudgetVerifier.from_affine(calib["t_fix"],
-                                                   calib["t_lin"], L_ref=8)
+        t_fix, t_lin = calib["t_fix"], calib["t_lin"]
         for K in (8, 20):
             acc = {"paper": [], "padded_tb": [], "packed": [], "pipelined": [],
                    "packed_pipe": []}
@@ -45,40 +39,28 @@ def run(fast: bool = True) -> list[dict]:
                 _, alphas = paper_devices(pair, K, rng)
                 ch = ChannelState.sample(cfg, K, rng)
                 t_dev = rng.uniform(0.85, 1.15, K) * calib["T_S"]
-                T_ver = calib["t_fix"] + K * calib["t_lin"]
 
-                acc["paper"].append(
-                    solve_heterogeneous(alphas, t_dev, ch.rates, Q, B, T_ver,
-                                        L_max=25).goodput)
+                def plan(scheme, pipelined=False):
+                    return cell_plan(scheme, cfg, t_fix, t_lin, alphas,
+                                     t_dev, ch, pipelined=pipelined)
+
+                acc["paper"].append(plan("hete").goodput)
                 acc["padded_tb"].append(
-                    solve_heterogeneous_padded_tokenbudget(
-                        alphas, t_dev, ch.rates, Q, B, verifier,
-                        L_max=25).goodput)
-                acc["packed"].append(
-                    solve_heterogeneous_packed(alphas, t_dev, ch.rates, Q, B,
-                                               verifier, L_max=25).goodput)
-                t_ver_of_K = lambda k: calib["t_fix"] + k * calib["t_lin"]  # noqa: E731
+                    plan("hete-padded-tokenbudget").goodput)
+                acc["packed"].append(plan("hete-packed").goodput)
                 acc["pipelined"].append(
-                    pipelined_goodput(alphas, t_dev, ch.rates, Q, B,
-                                      t_ver_of_K, L_max=25)["goodput"])
-
-                def packed_solver(a, t, r, q, b, tv, L_max=25):
-                    return solve_heterogeneous_packed(a, t, r, q, b, verifier,
-                                                      L_max=L_max)
+                    plan("hete", pipelined=True)["goodput"])
                 acc["packed_pipe"].append(
-                    pipelined_goodput(alphas, t_dev, ch.rates, Q, B,
-                                      t_ver_of_K, L_max=25,
-                                      solver=packed_solver)["goodput"])
+                    plan("hete-packed", pipelined=True)["goodput"])
             m = {k: float(np.mean(v)) for k, v in acc.items()}
             # multi-draft (L, J) joint optimum in the uniform regime
             rng = np.random.default_rng(0)
             _, alphas = paper_devices(pair, K, rng)
             t_dev = rng.uniform(0.85, 1.15, K) * calib["T_S"]
             ch = ChannelState.sample(cfg, K, rng)
-            md = solve_uniform_multidraft(float(np.mean(alphas)), t_dev,
-                                          ch.rates, Q, B, verifier, K)
-            m["multidraft"] = md["best"]["goodput"]
-            m["multidraft_J"] = md["best"]["J"]
+            md = cell_plan("multidraft", cfg, t_fix, t_lin, alphas, t_dev, ch)
+            m["multidraft"] = md.goodput
+            m["multidraft_J"] = md.draft_width
             rows.append({
                 "name": f"beyond/{pair}/K={K}",
                 "us_per_call": "",

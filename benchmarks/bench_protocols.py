@@ -1,23 +1,37 @@
-"""Fig. 6: P2P-SPIN vs Cen-SPIN vs Multi-SPIN maximum sum goodput."""
+"""Fig. 6: P2P-SPIN vs Cen-SPIN vs Multi-SPIN maximum sum goodput.
+
+Every protocol runs through the scheme registry + ``MultiSpinCell``
+(``CellConfig(scheme=...)`` — no solver is constructed directly); the
+recorded fading block is replayed into the cell, so the reported numbers
+are bit-identical to the direct-solver values of the pre-registry driver.
+
+``--smoke`` is the CI gate: it checks the Fig.-6 ordering (Multi > Cen >
+P2P) and that the goodput ratios stay inside a loose band around the
+paper's, exiting non-zero otherwise.
+"""
 
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
 from repro.core.channel import ChannelState
-from repro.core.draft_control import (
-    solve_centralized,
-    solve_heterogeneous,
-    solve_p2p,
-)
 
 from .common import (
     FIG6_TARGETS,
     K_DEFAULT,
+    cell_plan,
+    channel_slice,
     load_calibration,
     paper_channel,
     paper_devices,
 )
+
+# loose structural bands for the CI smoke gate (paper: 2.5-3.0x over Cen,
+# 4.0-4.6x over P2P) — wide enough to never flake, tight enough to catch a
+# scheme wired to the wrong latency model
+SMOKE_RATIO_BANDS = {"cen": (1.3, 6.0), "p2p": (2.0, 10.0)}
 
 
 def run(fast: bool = True) -> list[dict]:
@@ -26,24 +40,23 @@ def run(fast: bool = True) -> list[dict]:
     for pair in ("llama2", "qwen35"):
         calib = load_calibration()[pair]
         cfg = paper_channel(pair)
-        Q, B = cfg.q_tok_bits, cfg.total_bandwidth_hz
         K = K_DEFAULT
+        t_fix, t_lin = calib["t_fix"], calib["t_lin"]
         acc = {"multi": [], "cen": [], "p2p": []}
         for seed in range(n_seeds):
             rng = np.random.default_rng(seed)
             tasks, alphas = paper_devices(pair, K, rng)
             ch = ChannelState.sample(cfg, K, rng)
             t_dev = rng.uniform(0.85, 1.15, K) * calib["T_S"]
-            T_ver = calib["t_fix"] + K * calib["t_lin"]
             acc["multi"].append(
-                solve_heterogeneous(alphas, t_dev, ch.rates, Q, B, T_ver,
-                                    L_max=25).goodput)
+                cell_plan("hete", cfg, t_fix, t_lin, alphas, t_dev,
+                          ch).goodput)
             acc["cen"].append(
-                solve_centralized(alphas, T_ver, calib["t_fix"] * 0.15,
-                                  calib["t_lin"] * 0.6, L_max=25).goodput)
+                cell_plan("cen", cfg, t_fix, t_lin, alphas, t_dev,
+                          ch).goodput)
             acc["p2p"].append(
-                solve_p2p(alphas[0], t_dev[0], ch.rates[0], Q, B,
-                          calib["t_fix"] + calib["t_lin"], L_max=25).goodput)
+                cell_plan("p2p", cfg, t_fix, t_lin, alphas[:1], t_dev[:1],
+                          channel_slice(ch, slice(0, 1))).goodput)
         means = {k: float(np.mean(v)) for k, v in acc.items()}
         for proto in ("multi", "cen", "p2p"):
             rows.append({
@@ -59,10 +72,46 @@ def run(fast: bool = True) -> list[dict]:
             "derived": (f"multi/cen={means['multi'] / means['cen']:.2f} "
                         f"(paper {'2.5' if pair == 'llama2' else '3.0'}) "
                         f"multi/p2p={means['multi'] / means['p2p']:.2f}"),
+            "ratios": {p: means["multi"] / means[p] for p in ("cen", "p2p")},
+            "means": means,
         })
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def smoke(rows: list[dict]) -> None:
+    """CI gate over the Fig.-6 structure; raises SystemExit on violation."""
+    failures = []
+    for r in rows:
+        if "goodput" in r and not r["goodput"] > 0:
+            failures.append(f"{r['name']}: non-positive goodput")
+        means = r.get("means")
+        if means is not None and not (means["multi"] > means["cen"]
+                                      > means["p2p"] > 0):
+            failures.append(f"{r['name']}: Fig.-6 ordering violated "
+                            f"(multi={means['multi']:.1f} "
+                            f"cen={means['cen']:.1f} p2p={means['p2p']:.1f})")
+        for proto, (lo, hi) in SMOKE_RATIO_BANDS.items():
+            ratio = r.get("ratios", {}).get(proto)
+            if ratio is not None and not lo <= ratio <= hi:
+                failures.append(f"{r['name']}: multi/{proto}={ratio:.2f} "
+                                f"outside [{lo}, {hi}]")
+    if failures:
+        raise SystemExit("protocols smoke FAILED:\n  " + "\n  ".join(failures))
+    print("protocols smoke OK")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: Fig.-6 ordering + ratio bands")
+    args = ap.parse_args()
+    rows = run(fast=not args.full)
+    for r in rows:
         print(r["name"], r["derived"])
+    if args.smoke:
+        smoke(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,11 +17,6 @@ import numpy as np
 
 from repro.api import CellConfig, MultiSpinCell, Request
 from repro.core.channel import ChannelConfig, ChannelState
-from repro.core.draft_control import (
-    solve_centralized,
-    solve_heterogeneous,
-    solve_p2p,
-)
 from repro.training.data import TABLE_I
 
 EXPERIMENTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
@@ -50,6 +45,36 @@ def paper_devices(pair: str, K: int, rng: np.random.Generator):
     return tasks, alphas
 
 
+def cell_plan(scheme: str, channel: ChannelConfig, t_fix: float, t_lin: float,
+              alphas: np.ndarray, t_dev: np.ndarray, ch: ChannelState,
+              scheme_params: dict | None = None, L_max: int = 25,
+              pipelined: bool = False, **cfg_kw):
+    """Plan one round through a ``MultiSpinCell`` at a RECORDED channel
+    realization — the registry-backed replacement for calling a solver
+    directly.  Devices are (alpha, T_S) rows; ``ch`` is replayed via
+    ``load_channel`` so the plan sees bit-identical rates to a direct
+    solve.  Returns the ``RoundPlan`` (or the pipelined plan dict)."""
+    K = len(alphas)
+    cfg = CellConfig(scheme=scheme, scheme_params=scheme_params or {},
+                     channel=channel, t_ver_fix=t_fix, t_ver_lin=t_lin,
+                     L_max=L_max, max_batch=K, **cfg_kw)
+    cell = MultiSpinCell(cfg)
+    for i in range(K):
+        cell.submit(Request(rid=i, prompt_len=8, max_new_tokens=10 ** 9,
+                            alpha=float(alphas[i]), T_S=float(t_dev[i])))
+    cell.load_channel(ch)
+    if pipelined:
+        return cell.plan_pipelined(refade=False)
+    return cell.plan(refade=False)
+
+
+def channel_slice(ch: ChannelState, idx) -> ChannelState:
+    """Device-subset view of a recorded fading block (e.g. the P2P user)."""
+    return ChannelState(cfg=ch.cfg, avg_gains=np.asarray(ch.avg_gains)[idx],
+                        gains=np.asarray(ch.gains)[idx],
+                        rates=np.asarray(ch.rates)[idx])
+
+
 def planned_cell_goodput(scheme: str, pair: str, K: int, seed: int,
                          calib: dict, B_hz: float | None = None) -> float:
     """Analytic goodput of one planned round for a freshly sampled
@@ -74,27 +99,27 @@ def planned_cell_goodput(scheme: str, pair: str, K: int, seed: int,
 
 def _fig6_predict(pair: str, T_S: float, t_fix: float, t_lin: float,
                   K: int = K_DEFAULT, n_seeds: int = 4) -> dict:
-    """Analytic goodput of the three protocols at the paper's settings."""
+    """Analytic goodput of the three protocols at the paper's settings,
+    every one planned through the registered schemes + ``MultiSpinCell``
+    (the recorded channel is replayed, so the numbers are bit-identical to
+    the direct solver calls this replaced)."""
     cfg = paper_channel(pair)
-    Q = cfg.q_tok_bits
-    B = cfg.total_bandwidth_hz
     out = {"multi": [], "cen": [], "p2p": []}
     for seed in range(n_seeds):
         rng = np.random.default_rng(seed)
         tasks, alphas = paper_devices(pair, K, rng)
         ch = ChannelState.sample(cfg, K, rng)
         t_dev = rng.uniform(0.85, 1.15, K) * T_S
-        T_ver = t_fix + K * t_lin
-        hete = solve_heterogeneous(alphas, t_dev, ch.rates, Q, B, T_ver, L_max=25)
-        out["multi"].append(hete.goodput)
-        # Cen-SPIN: server drafts with batched SLM (A100-class, affine in K)
-        cen = solve_centralized(alphas, T_ver, t_fix * 0.15, t_lin * 0.6,
-                                L_max=25)
-        out["cen"].append(cen.goodput)
+        out["multi"].append(
+            cell_plan("hete", cfg, t_fix, t_lin, alphas, t_dev, ch).goodput)
+        # Cen-SPIN: server drafts with batched SLM (A100-class, affine in K;
+        # CellConfig's default t_draft model is exactly this convention)
+        out["cen"].append(
+            cell_plan("cen", cfg, t_fix, t_lin, alphas, t_dev, ch).goodput)
         # P2P: one device, full bandwidth
-        p2p = solve_p2p(alphas[0], t_dev[0], ch.rates[0], Q, B,
-                        t_fix + t_lin, L_max=25)
-        out["p2p"].append(p2p.goodput)
+        out["p2p"].append(
+            cell_plan("p2p", cfg, t_fix, t_lin, alphas[:1], t_dev[:1],
+                      channel_slice(ch, slice(0, 1))).goodput)
     return {k: float(np.mean(v)) for k, v in out.items()}
 
 

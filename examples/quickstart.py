@@ -23,7 +23,8 @@ requests = [Request(rid=i, prompt_len=8, max_new_tokens=10 ** 9,
             for i, (f, t) in enumerate(zip(rng.uniform(0.85, 1.15, K), tasks))]
 
 # 2. one JSON-serializable config: scheme (Algorithm 1: heterogeneous
-#    lengths), channel, and the verification latency model
+#    lengths), channel, and the verification latency model; every scheme's
+#    parameters and capability flags come from the registry's schemas
 config = CellConfig(scheme="hete", t_ver_fix=0.035, t_ver_lin=0.0177,
                     max_batch=K)
 print("registered schemes:", ", ".join(available_schemes()))
@@ -44,8 +45,11 @@ print(f"\n{summary['rounds']} rounds, {summary['tokens']:.0f} tokens, "
       f"sum goodput {summary['goodput']:.1f} tok/s")
 
 # 4. compare against the heterogeneity-agnostic baseline — same cell, one
-#    config field changed
-fixed_cell = MultiSpinCell(CellConfig(scheme="fixed", L_fixed=8, max_batch=K),
+#    config field changed (scheme_params validates against the scheme's
+#    declared Params schema)
+fixed_cell = MultiSpinCell(CellConfig(scheme="fixed",
+                                      scheme_params={"L_fixed": 8},
+                                      max_batch=K),
                            rng=np.random.default_rng(0))
 for r in requests:
     fixed_cell.submit(Request(rid=r.rid, prompt_len=r.prompt_len,

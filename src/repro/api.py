@@ -10,10 +10,12 @@ Everything needed to stand up, drive, and extend a Multi-SPIN cell::
     cell.drain()
     print(cell.scheduler.stats.goodput)
 
-Scheme solvers are pluggable (``@register_scheme``), as are verification
-backends (``SyntheticBackend`` for analytic sweeps, ``EngineBackend`` for
-real JAX models).  ``SpecEngine`` and the paged-KV-cache names are resolved
-lazily to keep the analytic path free of jax import cost.
+Scheme solvers are registered ``Scheme`` classes (``@register_scheme``)
+planning a structured ``CellObservation`` into a ``RoundPlan``; so are the
+verification backends pluggable (``SyntheticBackend`` for analytic sweeps,
+``EngineBackend`` for real JAX models).  ``SpecEngine`` and the
+paged-KV-cache names are resolved lazily to keep the analytic path free of
+jax import cost.
 """
 
 from repro.core.channel import ChannelConfig, ChannelState  # noqa: F401
@@ -23,9 +25,16 @@ from repro.core.controller import (  # noqa: F401
     VerificationLatencyModel,
 )
 from repro.core.schemes import (  # noqa: F401
+    CellObservation,
+    RoundPlan,
+    Scheme,
+    SchemeCapabilities,
+    SchemeCapabilityError,
     available_schemes,
+    build_scheme,
     get_scheme,
     register_scheme,
+    scheme_table_markdown,
 )
 from repro.serving.backends import (  # noqa: F401
     EngineBackend,
@@ -47,6 +56,7 @@ from repro.serving.scheduler import (  # noqa: F401
 __all__ = [
     "AcceptanceEstimator",
     "CellConfig",
+    "CellObservation",
     "ChannelConfig",
     "ChannelState",
     "EngineBackend",
@@ -55,17 +65,23 @@ __all__ = [
     "PagedKVCache",
     "PagePoolExhausted",
     "Request",
+    "RoundPlan",
     "RoundRecord",
     "RoundScheduler",
     "SCHEDULES",
+    "Scheme",
+    "SchemeCapabilities",
+    "SchemeCapabilityError",
     "SchedulerStats",
     "SpecEngine",
     "SyntheticBackend",
     "VerificationBackend",
     "VerificationLatencyModel",
     "available_schemes",
+    "build_scheme",
     "get_scheme",
     "register_scheme",
+    "scheme_table_markdown",
 ]
 
 _LAZY_JAX = ("SpecEngine", "PagedKVCache", "PagePoolExhausted")

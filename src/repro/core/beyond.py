@@ -36,7 +36,6 @@ from .draft_control import (
     heterogeneous_lengths,
     round_lengths,
     search_grids,
-    solve_heterogeneous,
 )
 from .goodput import expected_accepted_tokens
 
@@ -65,7 +64,8 @@ class TokenBudgetVerifier:
         return cls(t_fix=t_fix, c_seq=t_lin * kv_fraction,
                    c_tok=t_lin * (1 - kv_fraction) / (L_ref + 1))
 
-    def padded(self, K: int, L_max) -> float:
+    def padded(self, K: int, L_max):
+        """Zero-padded batch cost; ``L_max`` may carry batch dimensions."""
         return self.t_fix + self.c_seq * K + self.c_tok * K * (L_max + 1.0)
 
     def packed(self, lengths: np.ndarray) -> float:
@@ -135,7 +135,7 @@ def solve_heterogeneous_padded_tokenbudget(alphas, T_S, r, Q_tok, B,
     L_int = round_lengths(np.nan_to_num(L_tilde, nan=1.0), L_max)
     phi_hat, _ = solve_equalized_phi(L_int, T_S[None, :], r[None, :], Q_tok, B)
     n_acc = np.sum(expected_accepted_tokens(alphas[None, :], L_int), axis=-1)
-    t_ver = np.array([verifier.padded(K, lm) for lm in np.max(L_int, axis=-1)])
+    t_ver = verifier.padded(K, np.max(L_int, axis=-1))  # vectorized over grid
     tau = n_acc / (phi_hat + t_ver)
     tau = np.where(np.isfinite(tau), tau, -np.inf)
     best = int(np.argmax(tau))
@@ -144,39 +144,50 @@ def solve_heterogeneous_padded_tokenbudget(alphas, T_S, r, Q_tok, B,
     return DraftControlSolution(
         lengths=L_best, bandwidth=np.asarray(B_best), goodput=float(tau[best]),
         equalized_latency=float(phi_best),
-        meta={"scheme": "hete-padded-tokenbudget"},
+        # the token-budget padded cost is the scheme's OWN verification
+        # model — carried in meta so executed rounds bill it instead of the
+        # affine T_ver(K) (same contract as the packed solver)
+        meta={"scheme": "hete-padded-tokenbudget", "t_ver": float(t_ver[best])},
     )
 
 
-def pipelined_goodput(alphas, T_S, r, Q_tok, B, t_ver_of_K,
-                      L_max: int = 25, solver=None) -> dict:
+def pipelined_plan(scheme, obs) -> dict:
     """Two half-batch pipeline: steady-state period = max(T_ma, T_ver).
 
-    Each half gets the full bandwidth while it uploads (the other half is in
-    its verify phase), so the half-cell is solved at bandwidth B.  Returns
-    {goodput, period, halves: [solutions]}.
+    ``scheme`` is a registered ``repro.core.schemes.Scheme`` instance and
+    ``obs`` the full-cell ``CellObservation``; each half is planned on its
+    sub-observation at the FULL bandwidth (the other half is in its verify
+    phase while this one uploads).  Returns
+    ``{goodput, period, halves: [RoundPlan]}``.
     """
-    alphas = np.asarray(alphas, dtype=np.float64)
-    K = len(alphas)
+    if scheme.capabilities.server_drafting:
+        raise ValueError(
+            f"scheme {scheme.name!r} drafts on the server (capability "
+            f"'server_drafting'): a two-half pipeline would overlap the "
+            f"server's own drafting with its own verification")
+    alphas = np.asarray(obs.alphas, dtype=np.float64)
     idx = np.argsort(alphas)          # interleave to balance the halves
-    halves = [idx[0::2], idx[1::2]]
-    solver = solver or solve_heterogeneous
-    total_tokens, sols, t_ma, t_ver = 0.0, [], [], []
+    halves = [h for h in (idx[0::2], idx[1::2]) if len(h)]
+    total_tokens, plans, t_ma, t_ver = 0.0, [], [], []
     for h in halves:
-        Kh = len(h)
-        tv = t_ver_of_K(Kh)
-        sol = solver(alphas[h], np.asarray(T_S)[h], np.asarray(r)[h], Q_tok, B,
-                     tv, L_max=L_max)
-        total_tokens += float(np.sum(expected_accepted_tokens(alphas[h],
-                                                              sol.lengths)))
-        t_ma.append(sol.equalized_latency)
-        # a solver with its own verification model reports the true t_ver
-        t_ver.append(float(sol.meta.get("t_ver", tv)))
-        sols.append(sol)
-    # steady-state cycle: verify(A) overlaps draft/upload(B) and vice versa
-    period = (max(t_ma[0], t_ver[1]) + max(t_ma[1], t_ver[0]))
+        obs_h = obs.take(h)
+        plan = scheme.plan(obs_h)
+        total_tokens += (float(plan.expected_tokens)
+                         if plan.expected_tokens is not None else
+                         float(np.sum(expected_accepted_tokens(alphas[h],
+                                                               plan.lengths))))
+        t_ma.append(plan.equalized_latency)
+        # a scheme with its own verification model reports the true t_ver
+        t_ver.append(float(plan.t_ver) if plan.t_ver is not None
+                     else obs_h.t_ver())
+        plans.append(plan)
+    if len(halves) == 1:              # K == 1: nothing to overlap with
+        period = t_ma[0] + t_ver[0]
+    else:
+        # steady-state cycle: verify(A) overlaps draft/upload(B), vice versa
+        period = (max(t_ma[0], t_ver[1]) + max(t_ma[1], t_ver[0]))
     return {"goodput": total_tokens / period, "period": float(period),
-            "halves": sols}
+            "halves": plans}
 
 
 # ---------------------------------------------------------------------------
@@ -202,31 +213,46 @@ def expected_accepted_multidraft(alpha, L, J, xp=np):
 def solve_uniform_multidraft(alpha, T_S, r, Q_tok, B,
                              verifier: TokenBudgetVerifier, K: int,
                              L_max: int = 25, J_max: int = 6) -> dict:
-    """Joint (L, J) optimization in the uniform regime.
+    """Joint (L, J) optimization in the uniform regime, vectorized over the
+    whole (J, L) grid.
 
     Per round: each device drafts J*L tokens locally (J sequential draft
     passes share the prefix KV, so drafting costs J*L*T_S), uploads J*L
     token payloads, and the server verifies K*J sequences of L+1 window
-    tokens.  Returns the grid optimum and the J=1 (paper) baseline.
+    tokens.  Returns the grid optimum and the J=1 (paper) baseline, plus
+    the Lemma-1 bandwidth shares at the winning J.
     """
-    theta_1, _ = solve_equalized_theta(T_S, r, Q_tok, B)
+    T_S = np.asarray(T_S, dtype=np.float64)
+    r = np.asarray(r, dtype=np.float64)
+    Kd = len(T_S)
+    Js = np.arange(1, J_max + 1, dtype=np.float64)
+    # Equalized theta with a J-fold payload: eq. 20 with Q_tok*J is the same
+    # root as eq. 20 with budget B/J (both sides scale by J), which batches
+    # all J rows through one bisection.  The realized shares are then
+    # B_k = J * B_k(scaled).
+    theta_J, B_scaled = solve_equalized_theta(
+        np.broadcast_to(T_S, (J_max, Kd)), np.broadcast_to(r, (J_max, Kd)),
+        Q_tok, B / Js)
 
-    best = {"goodput": -1.0}
-    base = None
-    for J in range(1, J_max + 1):
-        # J-fold payload: equalized theta with J*Q_tok per drafted token
-        theta_J, _ = solve_equalized_theta(T_S, r, Q_tok * J, B)
-        for L in range(1, L_max + 1):
-            e_n = float(expected_accepted_multidraft(np.float64(alpha), L, J))
-            t_ma = L * float(theta_J)  # draft+upload per token, J-fold payload
-            t_ver = verifier.t_fix + verifier.c_seq * K * J \
-                + verifier.c_tok * K * J * (L + 1)
-            tau = K * e_n / (t_ma + t_ver)
-            rec = {"goodput": tau, "L": L, "J": J, "E_N": e_n,
-                   "t_ma": t_ma, "t_ver": t_ver}
-            if J == 1 and (base is None or tau > base["goodput"]):
-                base = rec
-            if tau > best["goodput"]:
-                best = rec
+    Ls = np.arange(1, L_max + 1, dtype=np.float64)
+    # E[N](J, L) = 1 + sum_{l<=L} (1 - (1 - alpha^l)^J): cumulative sum of
+    # the survival terms gives every L at once.
+    surv = 1.0 - (1.0 - np.float64(alpha) ** Ls[None, :]) ** Js[:, None]
+    e_n = np.cumsum(surv, axis=1) + 1.0                       # (J, L)
+    t_ma = Ls[None, :] * theta_J[:, None]
+    t_ver = (verifier.t_fix + verifier.c_seq * K * Js[:, None]
+             + verifier.c_tok * K * Js[:, None] * (Ls[None, :] + 1.0))
+    tau = K * e_n / (t_ma + t_ver)
+
+    def rec(j: int, l: int) -> dict:
+        return {"goodput": float(tau[j, l]), "L": int(Ls[l]), "J": int(Js[j]),
+                "E_N": float(e_n[j, l]), "t_ma": float(t_ma[j, l]),
+                "t_ver": float(t_ver[j, l])}
+
+    j_best, l_best = np.unravel_index(int(np.argmax(tau)), tau.shape)
+    best = rec(j_best, l_best)
+    base = rec(0, int(np.argmax(tau[0])))
     return {"best": best, "single_draft": base,
-            "gain": best["goodput"] / base["goodput"] - 1.0}
+            "gain": best["goodput"] / base["goodput"] - 1.0,
+            "theta": float(theta_J[j_best]),
+            "bandwidth": Js[j_best] * B_scaled[j_best]}

@@ -1,10 +1,10 @@
 """Server-side multi-access draft controller (paper protocol step 1).
 
 Each round the server receives device profiles (acceptance rate, compute
-speed), measures uplink channels, and solves the multi-access draft control
-problem for the configured scheme.  Also hosts the online acceptance-rate
-estimator (EWMA over realized accept fractions) used when task profiles are
-not declared a priori.
+speed), measures uplink channels, assembles a ``CellObservation``, and asks
+the configured scheme for a ``RoundPlan``.  Also hosts the online
+acceptance-rate estimator (EWMA over realized accept fractions) used when
+task profiles are not declared a priori.
 """
 
 from __future__ import annotations
@@ -13,8 +13,13 @@ import dataclasses
 
 import numpy as np
 
-from .draft_control import DraftControlSolution
-from .schemes import available_schemes, get_scheme
+from .schemes import (
+    CellObservation,
+    RoundPlan,
+    available_schemes,
+    build_scheme,
+    get_scheme,
+)
 
 def __getattr__(name):
     # Derived live from the scheme registry — register new schemes in
@@ -27,7 +32,10 @@ def __getattr__(name):
 
 @dataclasses.dataclass
 class VerificationLatencyModel:
-    """T_ver(K) = T_fix + K T_lin (paper eq. 7), fitted per target model."""
+    """T_ver(K) = T_fix + K T_lin (paper eq. 7), fitted per target model.
+
+    The same affine-in-batch law models server-side drafting for Cen-SPIN
+    (a batched SLM forward per drafted token)."""
 
     t_fix: float
     t_lin: float
@@ -42,17 +50,48 @@ class MultiSpinController:
     q_tok_bits: float
     bandwidth_hz: float
     t_ver_model: VerificationLatencyModel
+    t_draft_model: VerificationLatencyModel | None = None  # Cen-SPIN drafting
     L_max: int = 25
     L_fixed: int = 8
     n_phi: int = 40
     n_lam: int = 40
+    deadline_factor: float | None = None
+    scheme_params: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
-        self.solver = get_scheme(self.scheme)
+        params = dict(self.scheme_params)
+        # legacy knob: the fixed scheme's length rides on the controller, so
+        # CellConfig(L_fixed=...) keeps working; scheme_params wins when set
+        cls = get_scheme(self.scheme)
+        if "L_fixed" in {f.name for f in dataclasses.fields(cls.Params)}:
+            params.setdefault("L_fixed", self.L_fixed)
+        self.scheme_obj = cls(**params)
+
+    def observe(self, alphas: np.ndarray, T_S: np.ndarray,
+                rates: np.ndarray) -> CellObservation:
+        """Assemble the per-round observation record for the scheme."""
+        td = self.t_draft_model
+        return CellObservation(
+            alphas=np.asarray(alphas, dtype=np.float64),
+            T_S=np.asarray(T_S, dtype=np.float64),
+            rates=np.asarray(rates, dtype=np.float64),
+            q_tok_bits=self.q_tok_bits, bandwidth_hz=self.bandwidth_hz,
+            t_ver_fix=self.t_ver_model.t_fix, t_ver_lin=self.t_ver_model.t_lin,
+            t_draft_fix=(td.t_fix if td is not None else 0.0),
+            t_draft_lin=(td.t_lin if td is not None else 0.0),
+            L_max=self.L_max, n_phi=self.n_phi, n_lam=self.n_lam,
+            deadline_factor=self.deadline_factor)
 
     def plan(self, alphas: np.ndarray, T_S: np.ndarray,
-             rates: np.ndarray) -> DraftControlSolution:
-        return self.solver(self, alphas, T_S, rates)
+             rates: np.ndarray) -> RoundPlan:
+        return self.scheme_obj.plan(self.observe(alphas, T_S, rates))
+
+    def plan_pipelined(self, alphas: np.ndarray, T_S: np.ndarray,
+                       rates: np.ndarray) -> dict:
+        """Two-half-batch pipelined plan: {goodput, period, halves}."""
+        from .beyond import pipelined_plan
+        return pipelined_plan(self.scheme_obj,
+                              self.observe(alphas, T_S, rates))
 
 
 class AcceptanceEstimator:

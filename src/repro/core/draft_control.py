@@ -197,14 +197,14 @@ def solve_homogeneous(alpha_eff, alphas, T_S, r, Q_tok, B, T_ver,
 def solve_homogeneous_exhaustive(alphas, T_S, r, Q_tok, B, T_ver,
                                  L_max: int = 25) -> DraftControlSolution:
     """Homo-Multi-SPIN baseline: exhaustive search over uniform L with
-    Lemma-1-optimal bandwidth (paper Sec. VI-A4)."""
+    Lemma-1-optimal bandwidth (paper Sec. VI-A4), vectorized over the whole
+    L grid."""
     alphas = np.asarray(alphas, dtype=np.float64)
     theta, B_star = solve_equalized_theta(T_S, r, Q_tok, B)
     Ls = np.arange(1, L_max + 1, dtype=np.float64)
-    taus = np.array([
-        float(np.sum(expected_accepted_tokens(alphas, L)) / (L * float(theta) + T_ver))
-        for L in Ls
-    ])
+    n_acc = np.sum(expected_accepted_tokens(alphas[None, :], Ls[:, None]),
+                   axis=-1)
+    taus = n_acc / (Ls * float(theta) + T_ver)
     best = int(np.argmax(taus))
     L = np.full(len(alphas), int(Ls[best]), dtype=np.int64)
     return DraftControlSolution(
@@ -279,10 +279,9 @@ def solve_centralized(alphas, T_ver, T_draft_fix, T_draft_lin,
     K = len(alphas)
     per_tok = T_draft_fix + K * T_draft_lin
     Ls = np.arange(1, L_max + 1, dtype=np.float64)
-    taus = np.array([
-        float(np.sum(expected_accepted_tokens(alphas, L)) / (L * per_tok + T_ver))
-        for L in Ls
-    ])
+    n_acc = np.sum(expected_accepted_tokens(alphas[None, :], Ls[:, None]),
+                   axis=-1)
+    taus = n_acc / (Ls * per_tok + T_ver)
     best = int(np.argmax(taus))
     return DraftControlSolution(
         lengths=np.full(K, int(Ls[best]), dtype=np.int64),

@@ -6,20 +6,27 @@
 Stands up a ``MultiSpinCell`` (controller + channel + scheduler) with a
 real-model ``EngineBackend`` and drives the session loop; the scheduler
 keeps the verification batch full and retires finished requests.  Scheme
-choices are enumerated from the scheme registry.  --dry-run lowers the
-serve_step under the production mesh instead.
+choices, their ``--scheme-arg key=val`` parameters, and the help text below
+are all derived from the scheme registry's declared schemas.  --dry-run
+lowers the serve_step under the production mesh instead.
 """
 
 from __future__ import annotations
 
 import argparse
 
-from repro.core.schemes import available_schemes
+from repro.core.schemes import (
+    available_schemes,
+    parse_scheme_args,
+    scheme_help_text,
+)
 from repro.serving.cell import SCHEDULES
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=scheme_help_text())
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--dry-run", action="store_true")
@@ -28,9 +35,15 @@ def main():
     ap.add_argument("--devices", type=int, default=4)
     ap.add_argument("--rounds", type=int, default=6)
     ap.add_argument("--scheme", default="hete", choices=available_schemes())
+    ap.add_argument("--scheme-arg", action="append", default=[],
+                    metavar="KEY=VAL",
+                    help="scheme parameter (repeatable); the valid keys per "
+                         "scheme are listed below, from each scheme's "
+                         "declared Params schema")
     ap.add_argument("--schedule", default="sync", choices=SCHEDULES)
     ap.add_argument("--max-new-tokens", type=int, default=32)
     args = ap.parse_args()
+    scheme_params = parse_scheme_args(args.scheme, args.scheme_arg)
 
     if args.dry_run:
         from repro.launch.dryrun import run_cell
@@ -67,7 +80,8 @@ def main():
     backend = EngineBackend(engine, engine.start(prompts))
 
     cfg = CellConfig(
-        scheme=args.scheme, schedule=args.schedule,
+        scheme=args.scheme, scheme_params=scheme_params,
+        schedule=args.schedule,
         channel=ChannelConfig(vocab_size=tcfg.vocab_size),
         t_ver_fix=0.035, t_ver_lin=0.0177, L_max=8, max_batch=K)
     cell = MultiSpinCell(cfg, backend=backend, rng=rng)

@@ -36,6 +36,8 @@ class VerificationBackend(Protocol):
     (when given, aligned with ``requests``) marks deadline-dropped devices
     False: the caller zeroes their accepted counts, and stateful backends
     must not advance their streams; stateless backends may ignore it.
+    ``draft_width`` (the plan's multi-draft J) is only passed when J > 1 —
+    single-draft backends need not accept the keyword.
     """
 
     def verify(self, lengths: np.ndarray, requests: Sequence,
@@ -48,18 +50,26 @@ class SyntheticBackend:
     acceptance rates (``Request.alpha``).  The estimator, when enabled,
     only informs planning — draws always use the true rates.  ``mask`` is
     ignored: draws are stateless, and drawing the full set preserves the
-    legacy protocol's exact rng stream under deadline masking."""
+    legacy protocol's exact rng stream under deadline masking.
+
+    ``draft_width`` J > 1 draws J independent runs per device and keeps the
+    longest (the server verifies all J drafts and commits the best — the
+    ``multidraft`` scheme's acceptance model)."""
 
     def verify(self, lengths: np.ndarray, requests: Sequence,
                rng: np.random.Generator, key=None,
-               mask: np.ndarray | None = None) -> np.ndarray:
+               mask: np.ndarray | None = None,
+               draft_width: int = 1) -> np.ndarray:
         lengths = np.asarray(lengths, dtype=np.int64)
         K = len(lengths)
         true_alpha = np.array([r.alpha for r in requests])
-        u = rng.random((K, int(lengths.max())))
-        pos_ok = np.arange(int(lengths.max()))[None, :] < lengths[:, None]
-        acc = (u < true_alpha[:, None]) & pos_ok
-        n = np.sum(np.cumprod(acc, axis=1), axis=1)
+        # (K, J, L) fills C-order, so J == 1 consumes the exact legacy
+        # rng stream of the (K, L) draw
+        u = rng.random((K, int(draft_width), int(lengths.max())))
+        pos_ok = np.arange(int(lengths.max()))[None, None, :] \
+            < lengths[:, None, None]
+        acc = (u < true_alpha[:, None, None]) & pos_ok
+        n = np.max(np.sum(np.cumprod(acc, axis=-1), axis=-1), axis=-1)
         return n + 1
 
 
@@ -129,7 +139,11 @@ class EngineBackend:
             return True
         if not self.dynamic:
             return False
-        length = min(self._prompt_len(request) + self.admit_headroom,
+        p = self._prompt_len(request)
+        # the admission ask covers BOTH the bucketed prefill shape (paged
+        # prefill pads the prompt to a power-of-two trace shape, which
+        # transiently maps that many pages) and one verification window
+        length = min(max(p + self.admit_headroom, self.engine.prompt_bucket(p)),
                      self.engine.max_len)
         return self.engine.can_admit(length)
 
@@ -192,9 +206,15 @@ class EngineBackend:
 
     def verify(self, lengths: np.ndarray, requests: Sequence,
                rng: np.random.Generator, key=None,
-               mask: np.ndarray | None = None) -> np.ndarray:
+               mask: np.ndarray | None = None,
+               draft_width: int = 1) -> np.ndarray:
         import jax
 
+        if draft_width != 1:
+            raise NotImplementedError(
+                "EngineBackend verifies one draft per device; the "
+                "'multidraft' scheme (capability 'multi_draft') needs "
+                "tree-attention verification — use SyntheticBackend")
         lengths = np.asarray(lengths, dtype=np.int64)
         rows = [self._row(r) for r in requests]
         B = self.batch_size

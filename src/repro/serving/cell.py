@@ -44,7 +44,7 @@ from repro.core.controller import (
     MultiSpinController,
     VerificationLatencyModel,
 )
-from repro.core.schemes import available_schemes
+from repro.core.schemes import available_schemes, get_scheme
 from repro.serving.backends import SyntheticBackend, VerificationBackend
 from repro.serving.scheduler import Request, RoundScheduler
 
@@ -74,9 +74,13 @@ class CellConfig:
     verification latency model, scheduler capacity, and lifecycle knobs."""
 
     scheme: str = "hete"
+    scheme_params: dict = dataclasses.field(default_factory=dict)
     channel: ChannelConfig = dataclasses.field(default_factory=ChannelConfig)
     t_ver_fix: float = 0.035              # T_ver(K) = t_fix + K t_lin (eq. 7)
     t_ver_lin: float = 0.0177
+    t_draft_fix: float | None = None      # Cen-SPIN server drafting per token:
+    t_draft_lin: float | None = None      # None -> 0.15*t_ver_fix / 0.6*t_ver_lin
+                                          # (A100-class SLM, Fig.-6 convention)
     L_max: int = 25
     L_fixed: int = 8
     n_phi: int = 40
@@ -94,6 +98,21 @@ class CellConfig:
         if self.schedule not in SCHEDULES:
             raise ValueError(f"schedule must be one of {SCHEDULES}, "
                              f"got {self.schedule!r}")
+        cls = get_scheme(self.scheme)
+        if cls.capabilities.single_user_only and self.max_batch != 1:
+            raise ValueError(
+                f"scheme {self.scheme!r} is single-user (capability "
+                f"'single_user_only'): it serves exactly one device, so "
+                f"max_batch must be 1, got {self.max_batch}")
+        if cls.capabilities.server_drafting and self.schedule == "pipelined":
+            raise ValueError(
+                f"scheme {self.scheme!r} drafts on the server (capability "
+                f"'server_drafting'): the pipelined schedule would overlap "
+                f"the server's own drafting with its own verification — "
+                f"use schedule='sync'")
+        # validate scheme_params against the scheme's declared schema now,
+        # not at first plan() (build_controller repeats this cheaply)
+        self.build_controller()
 
     # -- serialization ---------------------------------------------------
 
@@ -117,13 +136,21 @@ class CellConfig:
     # -- factories -------------------------------------------------------
 
     def build_controller(self) -> MultiSpinController:
+        t_draft = VerificationLatencyModel(
+            self.t_draft_fix if self.t_draft_fix is not None
+            else 0.15 * self.t_ver_fix,
+            self.t_draft_lin if self.t_draft_lin is not None
+            else 0.6 * self.t_ver_lin)
         return MultiSpinController(
-            scheme=self.scheme, q_tok_bits=self.channel.q_tok_bits,
+            scheme=self.scheme, scheme_params=dict(self.scheme_params),
+            q_tok_bits=self.channel.q_tok_bits,
             bandwidth_hz=self.channel.total_bandwidth_hz,
             t_ver_model=VerificationLatencyModel(self.t_ver_fix,
                                                  self.t_ver_lin),
+            t_draft_model=t_draft,
             L_max=self.L_max, L_fixed=self.L_fixed,
-            n_phi=self.n_phi, n_lam=self.n_lam)
+            n_phi=self.n_phi, n_lam=self.n_lam,
+            deadline_factor=self.deadline_factor)
 
 
 class MultiSpinCell:
@@ -250,6 +277,19 @@ class MultiSpinCell:
         return ChannelState(cfg=self.config.channel, avg_gains=self.avg_gains,
                             gains=self.gains, rates=self.rates)
 
+    def load_channel(self, state: ChannelState):
+        """Install an externally measured fading block for the active set
+        (row-aligned).  Benchmarks replay a recorded ``ChannelState`` so a
+        cell-planned round sees bit-identical rates to a direct solve."""
+        active = self.admit()
+        rates = np.asarray(state.rates, dtype=np.float64)
+        if len(rates) != len(active):
+            raise ValueError(f"channel state holds {len(rates)} devices, "
+                             f"cell has {len(active)} active")
+        self.avg_gains = np.asarray(state.avg_gains, dtype=np.float64).copy()
+        self.gains = np.asarray(state.gains, dtype=np.float64).copy()
+        self.rates = rates.copy()
+
     def planning_alphas(self, active_reqs: list[Request]) -> np.ndarray:
         """Acceptance rates the controller plans with: online estimates when
         enabled, else the requests' declared task profiles."""
@@ -257,17 +297,30 @@ class MultiSpinCell:
             return self.estimator.alpha_hat
         return np.array([r.alpha for r in active_reqs])
 
-    def plan(self):
-        """Admit + refade + solve draft control for the current active set
-        WITHOUT executing the round.  Analytic benchmarks and sweeps use
-        this to query the configured scheme at a live channel realization."""
+    def _planning_view(self, refade: bool):
         active_reqs = self.admit()
         if not active_reqs:
             raise RuntimeError("plan() with no active requests")
-        self._refade()
+        if refade:
+            self._refade()
         t_slm = np.array([r.T_S for r in active_reqs])
-        return self.controller.plan(self.planning_alphas(active_reqs), t_slm,
-                                    self.rates)
+        return self.planning_alphas(active_reqs), t_slm
+
+    def plan(self, refade: bool = True):
+        """Admit + refade + solve draft control for the current active set
+        WITHOUT executing the round.  Analytic benchmarks and sweeps use
+        this to query the configured scheme at a live channel realization
+        (``refade=False`` plans at the installed fading block — see
+        ``load_channel``)."""
+        alphas, t_slm = self._planning_view(refade)
+        return self.controller.plan(alphas, t_slm, self.rates)
+
+    def plan_pipelined(self, refade: bool = True) -> dict:
+        """Two-half-batch pipelined plan for the current active set:
+        ``{goodput, period, halves: [RoundPlan]}`` (steady-state period
+        ``max(T_ma, T_ver)`` per half — see ``core.beyond.pipelined_plan``)."""
+        alphas, t_slm = self._planning_view(refade)
+        return self.controller.plan_pipelined(alphas, t_slm, self.rates)
 
     # ------------------------------------------------------------------
     # the round loop
@@ -307,6 +360,27 @@ class MultiSpinCell:
             return self._step_pipelined(active_reqs, key)
         return self._step_sync(active_reqs, key)
 
+    def _per_device_latency(self, plan, lengths: np.ndarray,
+                            t_slm: np.ndarray,
+                            rates: np.ndarray) -> np.ndarray:
+        """Draft+upload latency per device.  Server-drafting schemes
+        (Cen-SPIN) provide their own per-device model — there is no uplink
+        to straggle on — otherwise it is L_k (T_k^S + Q/(B_k r_k))."""
+        if plan.per_device_latency is not None:
+            return np.asarray(plan.per_device_latency, dtype=np.float64)
+        bandwidth = np.asarray(plan.bandwidth, dtype=np.float64)
+        return lengths * (t_slm + self.controller.q_tok_bits
+                          / np.maximum(bandwidth * rates, 1e-9))
+
+    def _verify(self, plan, lengths, requests, key, mask) -> np.ndarray:
+        """Backend verification call; the multi-draft width J rides along
+        only when the plan asks for it (custom single-draft backends keep
+        the narrow signature)."""
+        kw = {} if plan.draft_width == 1 else {"draft_width": plan.draft_width}
+        return np.asarray(
+            self.backend.verify(lengths, requests, self.rng, key=key,
+                                mask=mask, **kw), dtype=np.int64)
+
     def _step_sync(self, active_reqs: list[Request], key=None) -> RoundRecord:
         K = len(active_reqs)
         # --- step 1: system configuration ---
@@ -318,19 +392,16 @@ class MultiSpinCell:
         bandwidth = np.asarray(plan.bandwidth, dtype=np.float64)
 
         # --- steps 2-3: drafting + upload latency (straggler-limited) ---
-        per_dev_lat = lengths * (t_slm + self.controller.q_tok_bits
-                                 / np.maximum(bandwidth * self.rates, 1e-9))
+        per_dev_lat = self._per_device_latency(plan, lengths, t_slm,
+                                               self.rates)
         active = self._deadline_mask(per_dev_lat)
         t_ma = float(np.max(per_dev_lat[active]))
 
         # --- step 4: batched verification (pluggable backend) ---
         K_active = int(active.sum())
-        t_ver = float(plan.meta.get("t_ver",
-                                    self.controller.t_ver_model(K_active)))
-        accepted = np.asarray(
-            self.backend.verify(lengths, active_reqs, self.rng, key=key,
-                                mask=active),
-            dtype=np.int64)
+        t_ver = (float(plan.t_ver) if plan.t_ver is not None
+                 else self.controller.t_ver_model(K_active))
+        accepted = self._verify(plan, lengths, active_reqs, key, active)
         accepted = np.where(active, accepted, 0)
 
         # --- step 5: feedback / estimator update (active devices only:
@@ -373,8 +444,8 @@ class MultiSpinCell:
         plan = self.controller.plan(alphas_all[h], t_slm_all[h], self.rates[h])
         lengths_h = np.asarray(plan.lengths, dtype=np.int64)
         bandwidth_h = np.asarray(plan.bandwidth, dtype=np.float64)
-        per_dev = lengths_h * (t_slm_all[h] + self.controller.q_tok_bits
-                               / np.maximum(bandwidth_h * self.rates[h], 1e-9))
+        per_dev = self._per_device_latency(plan, lengths_h, t_slm_all[h],
+                                           self.rates[h])
         # straggler masking within the half — same policy as the sync
         # schedule (this previously ignored deadline_factor entirely)
         ok_h = self._deadline_mask(per_dev)
@@ -390,15 +461,13 @@ class MultiSpinCell:
             step_time = max(t_ma, self._pending_ver)
         # like the sync schedule, verification is billed for the deadline
         # SURVIVORS only (dropped devices uploaded nothing to verify)
-        t_ver = float(plan.meta.get("t_ver",
-                                    self.controller.t_ver_model(
-                                        int(ok_h.sum()))))
+        t_ver = (float(plan.t_ver) if plan.t_ver is not None
+                 else self.controller.t_ver_model(int(ok_h.sum())))
         self._pending_ver = t_ver
         self._pending_rids = h_rids
 
-        accepted_h = np.asarray(
-            self.backend.verify(lengths_h, [active_reqs[j] for j in h],
-                                self.rng, key=key, mask=ok_h), dtype=np.int64)
+        accepted_h = self._verify(plan, lengths_h,
+                                  [active_reqs[j] for j in h], key, ok_h)
         accepted_h = np.where(ok_h, accepted_h, 0)
 
         participated = np.zeros(K, dtype=bool)

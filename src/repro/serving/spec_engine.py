@@ -92,6 +92,10 @@ class SpecEngine:
         self.d_pages: PagedKVCache | None = None
         self._free_rows: list[int] = []
         self._retired: set[int] = set()
+        # compile accounting: every paged-prefill batch shape actually traced
+        # (one XLA trace per distinct shape); tests hook ``on_prefill_trace``
+        self.prefill_shapes: set[tuple[int, int]] = set()
+        self.on_prefill_trace = None
 
     # ------------------------------------------------------------------
 
@@ -168,18 +172,32 @@ class SpecEngine:
                               self.d_pages.num_free_pages),
         }
 
+    def prompt_bucket(self, M: int) -> int:
+        """Power-of-two bucket (min 8, capped at ``max_len``) for paged
+        prefill shapes.  Joining prompts are right-padded to the bucket so
+        heavy churn compiles one XLA prefill trace per bucket instead of
+        one per distinct prompt length."""
+        b = 8
+        while b < M:
+            b *= 2
+        return max(M, min(b, self.max_len))
+
     def add_streams(self, state: StreamState, prompts: jax.Array):
         """Admit ``prompts`` (n, M) as new streams AFTER ``start()``.
 
         Retired batch rows are recycled first; otherwise the batch grows.
         Pages are allocated from the pool (``PagePoolExhausted`` when it is
-        truly out of memory — call ``can_admit`` first).  Returns
+        truly out of memory — call ``can_admit`` first).  The prefill runs
+        at the power-of-two ``prompt_bucket`` shape: pad K/V past the true
+        prompt is written but never attended (per-row length masking) and
+        its pages return to the pool right after the prefill.  Returns
         ``(new_state, rows)`` with the engine rows assigned in order."""
         if self.cache_kind != "paged":
             raise RuntimeError(
                 "contiguous caches are fixed at start(); construct the "
                 "engine with cache_kind='paged' to serve churn")
         n, M = prompts.shape
+        Mb = self.prompt_bucket(M)
         B = state.pending.shape[0]
         rows = []
         for _ in range(n):
@@ -189,9 +207,11 @@ class SpecEngine:
         allocated = []
         try:
             for row in rows:
-                self.t_pages.alloc_stream(row, M - 1)
+                # transiently map the BUCKETED prefill extent; truncated back
+                # to the true prompt right after the prefill below
+                self.t_pages.alloc_stream(row, Mb - 1)
                 allocated.append((self.t_pages, row))
-                self.d_pages.alloc_stream(row, M - 1)
+                self.d_pages.alloc_stream(row, Mb - 1)
                 allocated.append((self.d_pages, row))
         except Exception:
             for mgr, row in allocated:
@@ -201,17 +221,33 @@ class SpecEngine:
             raise
         self._retired -= set(rows)
 
-        # prefill ONLY the new rows; their pages view writes into the pools
+        # prefill ONLY the new rows; their pages view writes into the pools.
+        # Right-pad to the bucket with the last prompt token: padded K/V
+        # lands at positions >= M-1, which every later window write covers
+        # before attention can reach it (causal mask kj <= position).
+        if Mb > M:
+            pad = jnp.tile(prompts[:, -1:], (1, Mb - M))
+            padded = jnp.concatenate([prompts, pad], axis=1)
+        else:
+            padded = prompts
+        self.prefill_shapes.add((n, Mb))
+        if self.on_prefill_trace is not None:
+            self.on_prefill_trace((n, Mb))
         t_view = dict(self.t_cache,
                       pages=jnp.asarray(self.t_pages.page_table(rows)))
         d_view = dict(self.d_cache,
                       pages=jnp.asarray(self.d_pages.page_table(rows)))
-        _, t_view, _ = self.target.prefill(self.t_params, prompts[:, :-1],
+        _, t_view, _ = self.target.prefill(self.t_params, padded[:, :-1],
                                            t_view)
-        _, d_view, _ = self.draft.prefill(self.d_params, prompts[:, :-1],
+        _, d_view, _ = self.draft.prefill(self.d_params, padded[:, :-1],
                                           d_view)
         self.t_cache = {k: v for k, v in t_view.items() if k != "pages"}
         self.d_cache = {k: v for k, v in d_view.items() if k != "pages"}
+        if Mb > M:
+            # hand the bucket-padding pages straight back to the pool
+            for row in rows:
+                self.t_pages.truncate(row, M - 1)
+                self.d_pages.truncate(row, M - 1)
 
         # splice the new rows into the batched state
         n_grow = max(0, max(r + 1 for r in rows) - B) if rows else 0

@@ -5,12 +5,13 @@ import pytest
 
 from repro.core.beyond import (
     TokenBudgetVerifier,
-    pipelined_goodput,
+    pipelined_plan,
     solve_heterogeneous_packed,
     solve_heterogeneous_padded_tokenbudget,
 )
 from repro.core.channel import ChannelConfig, ChannelState
 from repro.core.draft_control import solve_heterogeneous
+from repro.core.schemes import CellObservation, build_scheme
 
 
 def _system(K=12, seed=0, B=10e6):
@@ -20,6 +21,13 @@ def _system(K=12, seed=0, B=10e6):
     cfg = ChannelConfig(total_bandwidth_hz=B)
     ch = ChannelState.sample(cfg, K, rng)
     return alphas, T_S, ch.rates, cfg.q_tok_bits, B
+
+
+def _obs(alphas, T_S, rates, Q, B, t_fix=0.035, t_lin=0.0177, L_max=25):
+    return CellObservation(alphas=np.asarray(alphas), T_S=np.asarray(T_S),
+                           rates=np.asarray(rates), q_tok_bits=Q,
+                           bandwidth_hz=B, t_ver_fix=t_fix, t_ver_lin=t_lin,
+                           L_max=L_max)
 
 
 def test_verifier_calibration_consistency():
@@ -60,19 +68,29 @@ def test_packed_saves_with_heterogeneous_lengths():
 def test_pipelined_beats_synchronous():
     """Overlap must win whenever T_ver is comparable to T_ma."""
     alphas, T_S, r, Q, B = _system(K=16, seed=1)
-    t_ver_of_K = lambda k: 0.035 + k * 0.0177  # noqa: E731
-    sync = solve_heterogeneous(alphas, T_S, r, Q, B, t_ver_of_K(16), L_max=25)
-    pipe = pipelined_goodput(alphas, T_S, r, Q, B, t_ver_of_K, L_max=25)
+    sync = solve_heterogeneous(alphas, T_S, r, Q, B, 0.035 + 16 * 0.0177,
+                               L_max=25)
+    pipe = pipelined_plan(build_scheme("hete"), _obs(alphas, T_S, r, Q, B))
     assert pipe["goodput"] > sync.goodput
     assert len(pipe["halves"]) == 2
 
 
 def test_pipelined_period_formula():
     alphas, T_S, r, Q, B = _system(K=8, seed=2)
-    t_ver_of_K = lambda k: 0.2  # noqa: E731  (verification-dominated)
-    pipe = pipelined_goodput(alphas, T_S, r, Q, B, t_ver_of_K, L_max=25)
+    # verification-dominated: t_ver(K) ~ 0.2 for every half
+    pipe = pipelined_plan(build_scheme("hete"),
+                          _obs(alphas, T_S, r, Q, B, t_fix=0.2, t_lin=0.0))
     # with t_ver >> t_ma the period approaches 2 * t_ver (server saturated)
     assert pipe["period"] >= 0.4 - 1e-9
+
+
+def test_pipelined_single_device_degenerates_to_serial():
+    """K == 1 has nothing to overlap with: the period is t_ma + t_ver."""
+    alphas, T_S, r, Q, B = _system(K=1, seed=3)
+    pipe = pipelined_plan(build_scheme("hete"), _obs(alphas, T_S, r, Q, B))
+    (plan,) = pipe["halves"]
+    assert pipe["period"] == pytest.approx(
+        plan.equalized_latency + 0.035 + 1 * 0.0177)
 
 
 def test_cell_pipelined_and_packed_schemes():

@@ -12,9 +12,11 @@ from repro.api import (
     MultiSpinCell,
     MultiSpinController,
     Request,
+    RoundPlan,
     SyntheticBackend,
     VerificationLatencyModel,
     available_schemes,
+    build_scheme,
     get_scheme,
 )
 from repro.core.controller import SCHEMES, AcceptanceEstimator
@@ -59,34 +61,89 @@ def test_cellconfig_rejects_unknown_scheme_and_schedule():
         CellConfig(schedule="nope")
 
 
+def _nondefault_params(scheme: str) -> dict:
+    """One non-default value per declared parameter, so the round trip
+    actually carries information."""
+    import dataclasses
+    out = {}
+    for f in dataclasses.fields(get_scheme(scheme).Params):
+        if isinstance(f.default, bool):
+            out[f.name] = not f.default
+        elif isinstance(f.default, int):
+            out[f.name] = f.default + 1
+        elif isinstance(f.default, float):
+            out[f.name] = f.default * 0.5
+    return out
+
+
+@pytest.mark.parametrize("scheme", sorted(available_schemes()))
+def test_cellconfig_json_round_trip_every_scheme(scheme):
+    """to_json/from_json must round-trip scheme_params for every registered
+    scheme (satellite: the config is the serialized deployment surface)."""
+    caps = get_scheme(scheme).capabilities
+    cfg = CellConfig(scheme=scheme, scheme_params=_nondefault_params(scheme),
+                     max_batch=1 if caps.single_user_only else 8,
+                     t_draft_fix=0.004, t_draft_lin=0.009)
+    back = CellConfig.from_json(cfg.to_json())
+    assert back == cfg
+    assert back.scheme_params == cfg.scheme_params
+
+
+def test_cellconfig_rejects_unknown_scheme_param():
+    with pytest.raises(ValueError, match="L_fixed"):
+        CellConfig(scheme="fixed", scheme_params={"bogus": 3})
+
+
+def test_p2p_cell_with_multiple_devices_raises_clear_error():
+    """Capability enforcement: P2P is single-user, so a multi-device cell
+    must fail loudly at CONFIG time, not mid-session."""
+    with pytest.raises(ValueError, match="single-user"):
+        CellConfig(scheme="p2p", max_batch=4)
+    # ... and the scheme itself refuses a multi-device observation
+    from repro.api import SchemeCapabilityError
+    ctrl = MultiSpinController(
+        scheme="p2p", q_tok_bits=31744.0, bandwidth_hz=10e6,
+        t_ver_model=VerificationLatencyModel(0.035, 0.0177))
+    with pytest.raises(SchemeCapabilityError, match="single-user"):
+        ctrl.plan(np.array([0.8, 0.8]), np.array([0.01, 0.01]),
+                  np.array([5.0, 5.0]))
+
+
 # ---------------------------------------------------------------------------
 # Scheme registry
 # ---------------------------------------------------------------------------
 
-def test_registry_lists_all_five_schemes():
-    assert set(available_schemes()) == {"hete", "homo", "uni-bw", "fixed",
-                                        "hete-packed"}
+ALL_SCHEMES = {"hete", "homo", "uni-bw", "fixed", "hete-packed",
+               "hete-padded-tokenbudget", "cen", "p2p", "multidraft"}
+
+
+def test_registry_lists_all_schemes():
+    assert set(available_schemes()) == ALL_SCHEMES
     # the controller's legacy SCHEMES tuple is derived, so it cannot drift
     assert set(SCHEMES) == set(available_schemes())
 
 
-@pytest.mark.parametrize("scheme", sorted({"hete", "homo", "uni-bw", "fixed",
-                                           "hete-packed"}))
+@pytest.mark.parametrize("scheme", sorted(ALL_SCHEMES))
 def test_registry_matches_controller_dispatch(scheme):
-    """controller.plan == calling the registered solver directly."""
+    """controller.plan == building the registered scheme and planning the
+    controller's own observation directly."""
     rng = np.random.default_rng(0)
-    K = 6
+    K = 1 if get_scheme(scheme).capabilities.single_user_only else 6
     alphas = rng.choice([0.71, 0.74, 0.86], K)
     T_S = rng.uniform(0.85, 1.15, K) * 0.009
     rates = rng.uniform(4.0, 8.0, K)
     ctrl = MultiSpinController(
         scheme=scheme, q_tok_bits=31744.0, bandwidth_hz=10e6,
-        t_ver_model=VerificationLatencyModel(0.035, 0.0177), L_max=12)
+        t_ver_model=VerificationLatencyModel(0.035, 0.0177),
+        t_draft_model=VerificationLatencyModel(0.005, 0.01), L_max=12)
     via_plan = ctrl.plan(alphas, T_S, rates)
-    direct = get_scheme(scheme)(ctrl, alphas, T_S, rates)
+    direct = build_scheme(scheme).plan(ctrl.observe(alphas, T_S, rates))
+    assert isinstance(via_plan, RoundPlan)
     np.testing.assert_array_equal(via_plan.lengths, direct.lengths)
     np.testing.assert_allclose(via_plan.bandwidth, direct.bandwidth)
     assert via_plan.goodput == pytest.approx(direct.goodput)
+    assert via_plan.draft_width == direct.draft_width
+    assert via_plan.verification_mode == direct.verification_mode
 
 
 def test_unknown_scheme_raises_with_choices():

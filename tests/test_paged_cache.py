@@ -362,3 +362,77 @@ def test_contiguous_overbatch_request_rejected_not_starved():
     assert [r.rid for r in cell.rejected] == [2]
     assert cell.rejected[0].done
     assert cell.idle                         # nothing parked in the queue
+
+
+# ---------------------------------------------------------------------------
+# Paged-prefill prompt bucketing (bounded XLA trace count under churn)
+# ---------------------------------------------------------------------------
+
+def test_paged_prefill_buckets_prompt_shapes():
+    """Heavy churn with many distinct prompt lengths must compile a bounded
+    number of prefill traces: ``add_streams`` pads each prompt batch to its
+    power-of-two bucket, and the compile-counting hook sees only bucket
+    shapes.  Committed text, positions, and page accounting stay exact."""
+    tcfg, dcfg = _engine_pair()
+    eng = SpecEngine(tcfg, dcfg, max_len=96, cache_kind="paged",
+                     num_pages=240)
+    eng.init_params(jax.random.PRNGKey(0))
+    traces = []
+    eng.on_prefill_trace = traces.append
+    state = eng.start(jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                         tcfg.vocab_size))
+    prompt_lens = list(range(9, 21))            # 12 distinct lengths
+    rows_of = {}
+    for i, M in enumerate(prompt_lens):
+        p = jax.random.randint(jax.random.PRNGKey(100 + i), (1, M), 0,
+                               tcfg.vocab_size)
+        state, rows = eng.add_streams(state, p)
+        rows_of[rows[0]] = np.asarray(p[0])
+    # one trace per BUCKET, not per distinct (n, M): lengths 9..16 -> 16,
+    # 17..20 -> 32, plus the start batch's 8
+    assert len(set(traces)) <= 3, traces
+    assert set(traces) == set(eng.prefill_shapes)
+    assert all(shape[1] in (8, 16, 32) for shape in traces)
+    for row, p in rows_of.items():
+        # true prompt preserved (no pad tokens leak into committed text)
+        assert state.committed[row] == list(p)
+        assert int(state.target_pos[row]) == len(p) - 1
+        # bucket-padding pages were handed back right after the prefill
+        assert eng.t_pages.length(row) == len(p) - 1
+    eng.t_pages.check_invariants()
+    eng.d_pages.check_invariants()
+    # the padded prefill is never attended: a spin round over every stream
+    # commits L+1-bounded tokens and keeps the allocator consistent
+    B = state.pending.shape[0]
+    state, res, _ = eng.spin_round(state, np.full(B, 3), jax.random.PRNGKey(9))
+    assert np.all(np.asarray(res.output_len) <= 4)
+    eng.t_pages.check_invariants()
+
+
+def test_bucketed_prefill_numerics_match_exact_prefill():
+    """A stream admitted through the bucketed prefill must score its
+    committed text identically to the model's from-scratch forward (the pad
+    K/V past the true prompt is never attended)."""
+    tcfg, dcfg = _engine_pair()
+    eng = SpecEngine(tcfg, dcfg, max_len=96, cache_kind="paged")
+    eng.init_params(jax.random.PRNGKey(0))
+    state = eng.start(jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
+                                         tcfg.vocab_size))
+    # length 11 -> bucketed to 16 (5 pad positions written, then truncated)
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 11), 0,
+                                tcfg.vocab_size)
+    state, rows = eng.add_streams(state, prompt)
+    assert (1, 16) in eng.prefill_shapes
+    for r in range(2):
+        state, _, _ = eng.spin_round(state, np.array([2, 3]),
+                                     jax.random.PRNGKey(30 + r))
+    b = rows[0]
+    eng.t_pages.extend(b, int(state.target_pos[b]) + 1)
+    view = dict(eng.t_cache,
+                pages=jnp.asarray(eng.t_pages.page_table(range(2))))
+    inc, _ = eng.target.forward_window(eng.t_params, state.pending[:, None],
+                                       view, state.target_pos)
+    seq = jnp.asarray(state.committed[b])[None, :]
+    full, _ = eng.target.apply(eng.t_params, seq)
+    np.testing.assert_allclose(np.asarray(inc[b, 0]), np.asarray(full[0, -1]),
+                               rtol=2e-3, atol=2e-3)

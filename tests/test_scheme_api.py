@@ -1,0 +1,286 @@
+"""The structured Observation→RoundPlan scheme API: registry schemas,
+capability flags, CLI parsing, and exact parity between cell-planned rounds
+and the underlying analytic solvers."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    CellConfig,
+    CellObservation,
+    ChannelState,
+    MultiSpinCell,
+    Request,
+    RoundPlan,
+    Scheme,
+    SchemeCapabilities,
+    available_schemes,
+    build_scheme,
+    get_scheme,
+    scheme_table_markdown,
+)
+from repro.core.beyond import (
+    TokenBudgetVerifier,
+    solve_heterogeneous_packed,
+    solve_uniform_multidraft,
+)
+from repro.core.channel import ChannelConfig
+from repro.core.draft_control import (
+    solve_centralized,
+    solve_heterogeneous,
+    solve_p2p,
+)
+from repro.core.schemes import parse_scheme_args, scheme_help_text
+
+
+def _obs(K=6, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    cfg = ChannelConfig()
+    ch = ChannelState.sample(cfg, K, rng)
+    base = dict(alphas=rng.choice([0.71, 0.74, 0.86, 0.93], K),
+                T_S=rng.uniform(0.85, 1.15, K) * 0.009, rates=ch.rates,
+                q_tok_bits=cfg.q_tok_bits, bandwidth_hz=cfg.total_bandwidth_hz,
+                t_ver_fix=0.035, t_ver_lin=0.0177,
+                t_draft_fix=0.005, t_draft_lin=0.01)
+    base.update(kw)
+    return CellObservation(**base)
+
+
+# ---------------------------------------------------------------------------
+# Records
+# ---------------------------------------------------------------------------
+
+def test_observation_latency_models():
+    obs = _obs(K=4)
+    assert obs.K == 4
+    assert obs.t_ver() == pytest.approx(0.035 + 4 * 0.0177)
+    assert obs.t_ver(1) == pytest.approx(0.035 + 0.0177)
+    assert obs.t_draft_per_token() == pytest.approx(0.005 + 4 * 0.01)
+    sub = obs.take(np.array([0, 2]))
+    assert sub.K == 2
+    np.testing.assert_array_equal(sub.alphas, obs.alphas[[0, 2]])
+    assert sub.bandwidth_hz == obs.bandwidth_hz   # cell-level fields ride
+
+
+def test_round_plan_defaults_and_expected_tokens():
+    plan = build_scheme("hete").plan(_obs())
+    assert isinstance(plan, RoundPlan)
+    assert plan.verification_mode == "padded"
+    assert plan.draft_width == 1
+    assert plan.t_ver is None                     # cell's affine model applies
+    assert plan.expected_tokens == pytest.approx(
+        plan.goodput * (plan.equalized_latency + _obs().t_ver()), rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Exact solver parity (the classes are adapters, not re-implementations)
+# ---------------------------------------------------------------------------
+
+def test_hete_scheme_matches_solver():
+    obs = _obs()
+    plan = build_scheme("hete").plan(obs)
+    sol = solve_heterogeneous(obs.alphas, obs.T_S, obs.rates, obs.q_tok_bits,
+                              obs.bandwidth_hz, obs.t_ver(), L_max=25)
+    np.testing.assert_array_equal(plan.lengths, sol.lengths)
+    np.testing.assert_allclose(plan.bandwidth, sol.bandwidth)
+    assert plan.goodput == sol.goodput
+
+
+def test_cen_scheme_matches_solver_and_has_no_uplink():
+    obs = _obs()
+    plan = build_scheme("cen").plan(obs)
+    sol = solve_centralized(obs.alphas, obs.t_ver(), obs.t_draft_fix,
+                            obs.t_draft_lin, L_max=25)
+    np.testing.assert_array_equal(plan.lengths, sol.lengths)
+    assert plan.goodput == sol.goodput
+    assert np.all(plan.bandwidth == 0.0)
+    # server drafting overrides the uplink latency model uniformly
+    np.testing.assert_allclose(
+        plan.per_device_latency,
+        plan.lengths * (obs.t_draft_fix + obs.K * obs.t_draft_lin))
+
+
+def test_cen_scheme_requires_draft_model():
+    with pytest.raises(ValueError, match="draft-latency"):
+        build_scheme("cen").plan(_obs(t_draft_fix=0.0, t_draft_lin=0.0))
+
+
+def test_p2p_scheme_matches_solver():
+    obs = _obs(K=1)
+    plan = build_scheme("p2p").plan(obs)
+    sol = solve_p2p(float(obs.alphas[0]), float(obs.T_S[0]),
+                    float(obs.rates[0]), obs.q_tok_bits, obs.bandwidth_hz,
+                    obs.t_ver(1), L_max=25)
+    np.testing.assert_array_equal(plan.lengths, sol.lengths)
+    assert plan.goodput == sol.goodput
+
+
+def test_packed_scheme_sets_mode_and_t_ver():
+    obs = _obs()
+    plan = build_scheme("hete-packed").plan(obs)
+    verifier = TokenBudgetVerifier.from_affine(obs.t_ver_fix, obs.t_ver_lin,
+                                               L_ref=8, kv_fraction=0.7)
+    sol = solve_heterogeneous_packed(obs.alphas, obs.T_S, obs.rates,
+                                     obs.q_tok_bits, obs.bandwidth_hz,
+                                     verifier, L_max=25)
+    assert plan.verification_mode == "packed"
+    assert plan.goodput == sol.goodput
+    assert plan.t_ver == pytest.approx(sol.meta["t_ver"])
+
+
+def test_padded_tokenbudget_scheme_carries_its_t_ver():
+    """The padded token-budget scheme must bill executed rounds with its
+    OWN verifier cost, not the affine model (same contract as packed)."""
+    obs = _obs()
+    plan = build_scheme("hete-padded-tokenbudget").plan(obs)
+    verifier = TokenBudgetVerifier.from_affine(obs.t_ver_fix, obs.t_ver_lin,
+                                               L_ref=8, kv_fraction=0.7)
+    assert plan.t_ver == pytest.approx(
+        verifier.padded(obs.K, int(np.max(plan.lengths))))
+
+
+def test_server_drafting_scheme_rejects_pipelined_schedule():
+    """A two-half pipeline would overlap the server's own drafting with its
+    own verification — both run on the same server."""
+    with pytest.raises(ValueError, match="server"):
+        CellConfig(scheme="cen", schedule="pipelined")
+    from repro.core.beyond import pipelined_plan
+    with pytest.raises(ValueError, match="server"):
+        pipelined_plan(build_scheme("cen"), _obs())
+
+
+def test_missing_required_param_not_reported_as_unknown():
+    """A Params field without a default must surface the real cause."""
+
+    @dataclasses.dataclass(frozen=True)
+    class NeedsCoef:
+        coef: float
+
+    cls = type("Needy", (Scheme,), {"name": "needy-test", "Params": NeedsCoef})
+    with pytest.raises(ValueError, match="coef"):
+        cls()          # no 'unknown parameter []' nonsense
+    assert "needy-test" not in available_schemes()   # never registered
+
+
+def test_multidraft_scheme_matches_solver():
+    obs = _obs()
+    plan = build_scheme("multidraft").plan(obs)
+    verifier = TokenBudgetVerifier.from_affine(obs.t_ver_fix, obs.t_ver_lin,
+                                               L_ref=8, kv_fraction=0.7)
+    out = solve_uniform_multidraft(float(np.mean(obs.alphas)), obs.T_S,
+                                   obs.rates, obs.q_tok_bits,
+                                   obs.bandwidth_hz, verifier, obs.K)
+    assert plan.goodput == out["best"]["goodput"]
+    assert plan.draft_width == out["best"]["J"]
+    assert np.all(plan.lengths == out["best"]["L"])
+    assert plan.expected_tokens == pytest.approx(obs.K * out["best"]["E_N"])
+
+
+# ---------------------------------------------------------------------------
+# Capabilities / schema surface
+# ---------------------------------------------------------------------------
+
+def test_capability_flags_declared():
+    assert get_scheme("p2p").capabilities.single_user_only
+    assert get_scheme("cen").capabilities.server_drafting
+    assert get_scheme("hete-packed").capabilities.packed_verification
+    assert get_scheme("multidraft").capabilities.multi_draft
+    assert get_scheme("hete").capabilities == SchemeCapabilities()
+    assert get_scheme("cen").capabilities.flags() == ("server_drafting",)
+
+
+def test_parse_scheme_args_coerces_types():
+    out = parse_scheme_args("multidraft", ["J_max=3", "kv_fraction=0.5"])
+    assert out == {"J_max": 3, "kv_fraction": 0.5}
+    assert isinstance(out["J_max"], int)
+    assert parse_scheme_args("hete", None) == {}
+    with pytest.raises(ValueError, match="no parameter"):
+        parse_scheme_args("fixed", ["nope=1"])
+    with pytest.raises(ValueError, match="key=value"):
+        parse_scheme_args("fixed", ["L_fixed"])
+
+
+def test_scheme_help_and_table_cover_registry():
+    help_text = scheme_help_text()
+    table = scheme_table_markdown()
+    for name in available_schemes():
+        assert name in help_text
+        assert f"`{name}`" in table
+    assert "single_user_only" in table        # p2p row carries its flag
+
+
+def test_register_scheme_rejects_bad_declarations():
+    from repro.core.schemes import register_scheme
+
+    with pytest.raises(ValueError, match="name"):
+        register_scheme(type("Anon", (Scheme,), {}))
+    with pytest.raises(ValueError, match="already registered"):
+        register_scheme(type("Dup", (Scheme,), {"name": "hete"}))
+
+
+# ---------------------------------------------------------------------------
+# Through the cell: the new schemes run end to end
+# ---------------------------------------------------------------------------
+
+def _drain_cell(scheme, K, scheme_params=None, **cfg_kw):
+    cfg = CellConfig(scheme=scheme, scheme_params=scheme_params or {},
+                     max_batch=K, seed=0, **cfg_kw)
+    cell = MultiSpinCell(cfg)
+    rng = np.random.default_rng(0)
+    for i in range(K):
+        cell.submit(Request(rid=i, prompt_len=8, max_new_tokens=24,
+                            alpha=float(rng.choice([0.74, 0.86])),
+                            T_S=0.009 * float(rng.uniform(0.85, 1.15))))
+    out = cell.drain()
+    assert cell.scheduler.stats.completed == K
+    return cell, out
+
+
+def test_cen_cell_runs_rounds_without_uplink_blowup():
+    cell, out = _drain_cell("cen", K=4)
+    assert out["goodput"] > 0
+    # server drafting: every round's multi-access phase is the batched SLM
+    # forward — bounded, not the 1e9-latency zero-bandwidth artifact
+    for rec in cell.history:
+        assert rec.t_ma < 10.0
+        assert np.all(rec.bandwidth == 0.0)
+
+
+def test_multidraft_cell_draws_wider_acceptance():
+    cell, out = _drain_cell("multidraft", K=4)
+    assert out["goodput"] > 0
+    for rec in cell.history:
+        assert np.all(rec.accepted <= rec.lengths + 1)
+
+
+def test_p2p_cell_single_user_session():
+    cell, out = _drain_cell("p2p", K=1)
+    assert out["goodput"] > 0
+
+
+def test_scheme_params_reach_the_planner():
+    cell, _ = _drain_cell("fixed", K=3, scheme_params={"L_fixed": 5})
+    assert all(np.all(rec.lengths == 5) for rec in cell.history)
+    # legacy knob still honored when scheme_params is silent
+    cell2, _ = _drain_cell("fixed", K=3, L_fixed=4)
+    assert all(np.all(rec.lengths == 4) for rec in cell2.history)
+
+
+def test_readme_scheme_table_in_sync():
+    """The README table is GENERATED (python -m repro.core.schemes); this
+    guards against drift after registering a new scheme."""
+    import pathlib
+    readme = (pathlib.Path(__file__).parent.parent / "README.md").read_text()
+    for line in scheme_table_markdown().splitlines():
+        assert line in readme, f"README scheme table is stale: missing {line!r}"
+
+
+def test_schemes_module_prints_table(capsys):
+    from repro.core import schemes as schemes_mod
+    assert hasattr(schemes_mod, "scheme_table_markdown")
+    # dataclass Params of every scheme must be instantiable from defaults
+    for name in available_schemes():
+        assert dataclasses.is_dataclass(get_scheme(name).Params)
+        build_scheme(name)
