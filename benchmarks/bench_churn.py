@@ -155,11 +155,17 @@ def main() -> None:
                     help="fast engine-backed CI gate (exits non-zero on "
                     "a dead churn path)")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="dump rows as JSON (CI artifact)")
     args = ap.parse_args()
-    for r in run(fast=not args.full, engine=args.engine, smoke=args.smoke,
-                 rounds=args.rounds, rate=args.rate, p_leave=args.p_leave,
-                 max_batch=args.max_batch, seed=args.seed):
+    rows = run(fast=not args.full, engine=args.engine, smoke=args.smoke,
+               rounds=args.rounds, rate=args.rate, p_leave=args.p_leave,
+               max_batch=args.max_batch, seed=args.seed)
+    for r in rows:
         print(r["name"], r["derived"])
+    if args.json:
+        from .common import write_rows_json
+        write_rows_json(args.json, rows)
 
 
 if __name__ == "__main__":

@@ -105,10 +105,15 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate: Fig.-6 ordering + ratio bands")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="dump rows as JSON (CI artifact)")
     args = ap.parse_args()
     rows = run(fast=not args.full)
     for r in rows:
         print(r["name"], r["derived"])
+    if args.json:
+        from .common import write_rows_json
+        write_rows_json(args.json, rows)
     if args.smoke:
         smoke(rows)
 

@@ -174,3 +174,31 @@ def fmt_rows(rows: list[dict]) -> str:
     for r in rows:
         out.append(f"{r['name']},{r.get('us_per_call', '')},{r.get('derived', '')}")
     return "\n".join(out)
+
+
+def _jsonable(obj):
+    """Recursive numpy -> python conversion for benchmark row dumps."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return _jsonable(obj.tolist())
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    return obj
+
+
+def write_rows_json(path: str, rows: list[dict]) -> None:
+    """Dump benchmark rows as JSON (CI uploads these as workflow artifacts
+    so the goodput trajectory is inspectable per PR)."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(_jsonable(rows), f, indent=2, sort_keys=True)
+    print(f"wrote {path}")

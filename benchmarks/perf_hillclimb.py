@@ -21,8 +21,6 @@ from __future__ import annotations
 import json
 import os
 
-import numpy as np
-
 EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
 
 

@@ -212,7 +212,8 @@ def expected_accepted_multidraft(alpha, L, J, xp=np):
 
 def solve_uniform_multidraft(alpha, T_S, r, Q_tok, B,
                              verifier: TokenBudgetVerifier, K: int,
-                             L_max: int = 25, J_max: int = 6) -> dict:
+                             L_max: int = 25, J_max: int = 6,
+                             J_min: int = 1) -> dict:
     """Joint (L, J) optimization in the uniform regime, vectorized over the
     whole (J, L) grid.
 
@@ -220,8 +221,14 @@ def solve_uniform_multidraft(alpha, T_S, r, Q_tok, B,
     passes share the prefix KV, so drafting costs J*L*T_S), uploads J*L
     token payloads, and the server verifies K*J sequences of L+1 window
     tokens.  Returns the grid optimum and the J=1 (paper) baseline, plus
-    the Lemma-1 bandwidth shares at the winning J.
+    the Lemma-1 bandwidth shares at the winning J.  ``J_min`` floors the
+    searched widths (engine benchmarks pin J_min=2 to exercise the tree
+    path even where the latency model prefers J*=1); the reported
+    ``single_draft`` baseline is always the true J=1 optimum.
     """
+    if not 1 <= J_min <= J_max:
+        raise ValueError(f"need 1 <= J_min <= J_max, got "
+                         f"J_min={J_min}, J_max={J_max}")
     T_S = np.asarray(T_S, dtype=np.float64)
     r = np.asarray(r, dtype=np.float64)
     Kd = len(T_S)
@@ -249,7 +256,9 @@ def solve_uniform_multidraft(alpha, T_S, r, Q_tok, B,
                 "E_N": float(e_n[j, l]), "t_ma": float(t_ma[j, l]),
                 "t_ver": float(t_ver[j, l])}
 
-    j_best, l_best = np.unravel_index(int(np.argmax(tau)), tau.shape)
+    tau_adm = tau[J_min - 1:]                   # admissible J >= J_min
+    j_adm, l_best = np.unravel_index(int(np.argmax(tau_adm)), tau_adm.shape)
+    j_best = j_adm + J_min - 1
     best = rec(j_best, l_best)
     base = rec(0, int(np.argmax(tau[0])))
     return {"best": best, "single_draft": base,

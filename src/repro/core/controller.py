@@ -17,7 +17,6 @@ from .schemes import (
     CellObservation,
     RoundPlan,
     available_schemes,
-    build_scheme,
     get_scheme,
 )
 

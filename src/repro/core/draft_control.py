@@ -139,7 +139,6 @@ def solve_heterogeneous(alphas, T_S, r, Q_tok, B, T_ver, L_max: int = 25,
     alphas = np.asarray(alphas, dtype=np.float64)
     T_S = np.asarray(T_S, dtype=np.float64)
     r = np.asarray(r, dtype=np.float64)
-    K = len(alphas)
 
     phis, lams = search_grids(alphas, T_S, r, Q_tok, B, L_max, n_phi, n_lam)
     PH, LM = np.meshgrid(phis, lams, indexing="ij")

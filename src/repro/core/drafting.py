@@ -34,6 +34,50 @@ class DraftResult:
     cache: object
 
 
+@dataclasses.dataclass
+class DraftForest:
+    """J i.i.d. drafting rounds per stream (the ``multidraft`` scheme's
+    device-side step).  Axes: (B, J, L[, Vhat]); ``cache`` is the SLM cache
+    after the LAST run — every run re-draws from the same committed prefix,
+    so run j's window writes fully shadow run j-1's.
+    """
+
+    tokens: jax.Array
+    probs: jax.Array
+    q_idx: jax.Array
+    q_val: jax.Array
+    cache: object
+
+
+def generate_draft_forest(model, params, cache, pending: jax.Array,
+                          pos: jax.Array, L: int, J: int, key: jax.Array,
+                          vhat: int, temperature: float = 1.0) -> DraftForest:
+    """Draft J independent length-L runs per stream.
+
+    Run 0 consumes ``key`` exactly like ``generate_drafts`` (J = 1 is
+    stream-identical to single drafting); run j > 0 folds j into the key.
+    Each run starts from the same committed prefix: its window writes land
+    at cache slots [pos, pos + L], past every valid position, so runs never
+    see each other (causal masking) and the last run's writes are the only
+    survivors — the engine repairs the cache to the accepted path anyway.
+    """
+    tokens, probs, q_idx, q_val = [], [], [], []
+    for j in range(J):
+        kj = key if j == 0 else jax.random.fold_in(key, j)
+        res = generate_drafts(model, params, cache, pending, pos, L, kj,
+                              vhat=vhat, temperature=temperature)
+        cache = res.cache
+        tokens.append(res.tokens)
+        probs.append(res.probs)
+        q_idx.append(res.q_idx)
+        q_val.append(res.q_val)
+    return DraftForest(tokens=jnp.stack(tokens, axis=1),
+                       probs=jnp.stack(probs, axis=1),
+                       q_idx=jnp.stack(q_idx, axis=1),
+                       q_val=jnp.stack(q_val, axis=1),
+                       cache=cache)
+
+
 def generate_drafts(model, params, cache, pending: jax.Array, pos: jax.Array,
                     L: int, key: jax.Array, vhat: int,
                     temperature: float = 1.0) -> DraftResult:
@@ -42,7 +86,6 @@ def generate_drafts(model, params, cache, pending: jax.Array, pos: jax.Array,
     pending: (B,) the last committed token not yet in the SLM cache.
     pos:     (B,) SLM cache fill levels (tokens already processed).
     """
-    B = pending.shape[0]
     toks = pending
     keys = jax.random.split(key, L)
     out_tokens, out_probs, out_idx, out_val = [], [], [], []

@@ -477,6 +477,8 @@ class MultiDraftScheme(Scheme):
     @dataclasses.dataclass(frozen=True)
     class Params:
         J_max: int = 6
+        J_min: int = 1         # floor the searched widths (engine gates
+                               # pin 2 so the tree path always exercises)
         kv_fraction: float = 0.7
         L_ref: int = 8
 
@@ -488,7 +490,7 @@ class MultiDraftScheme(Scheme):
         out = solve_uniform_multidraft(
             float(np.mean(obs.alphas)), obs.T_S, obs.rates, obs.q_tok_bits,
             obs.bandwidth_hz, self._verifier(obs), obs.K, L_max=obs.L_max,
-            J_max=self.params.J_max)
+            J_max=self.params.J_max, J_min=self.params.J_min)
         best = out["best"]
         K = obs.K
         lengths = np.full(K, int(best["L"]), dtype=np.int64)

@@ -14,7 +14,6 @@ quantized all-reduce on a named axis.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

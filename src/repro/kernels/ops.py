@@ -109,6 +109,33 @@ def paged_attention(q, k_pool, v_pool, page_table, lengths):
     return ref.paged_attention_ref(q, k_pool, v_pool, page_table, lengths)
 
 
+def tree_attention(q, k_cache, v_cache, lengths, win_mask):
+    """Token-tree verification window over a contiguous KV cache.
+
+    q: (B, T, H, D) tree window (slot 0 = pending token); caches:
+    (B, S, KV, D) with the window already written at slots
+    [lengths, lengths + T); win_mask: (B, T, T) ancestor-or-self matrix.
+    A lower-triangular win_mask recovers the sequential causal window.
+    """
+    if _use_pallas():
+        from .tree_attention import tree_attention_pallas
+        return tree_attention_pallas(q, k_cache, v_cache, lengths, win_mask,
+                                     interpret=_interpret())
+    return ref.tree_attention_ref(q, k_cache, v_cache, lengths, win_mask)
+
+
+def paged_tree_attention(q, k_pool, v_pool, page_table, lengths, win_mask):
+    """``tree_attention`` through a paged KV cache (scalar-prefetched page
+    table; pools (P, ps, KV, D), page_table (B, n_slots), -1 = unmapped)."""
+    if _use_pallas():
+        from .tree_attention import paged_tree_attention_pallas
+        return paged_tree_attention_pallas(q, k_pool, v_pool, page_table,
+                                           lengths, win_mask,
+                                           interpret=_interpret())
+    return ref.paged_tree_attention_ref(q, k_pool, v_pool, page_table,
+                                        lengths, win_mask)
+
+
 def decode_attention_q8(q, k_cache, v_cache, k_scale, v_scale, lengths):
     """Decode attention over an int8 KV cache (per-head scales)."""
     if _use_pallas():

@@ -94,6 +94,69 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return out.reshape(B, T, H, D)
 
 
+def tree_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                       lengths: jax.Array, win_mask: jax.Array,
+                       scale: float | None = None) -> jax.Array:
+    """Token-tree verification window over a contiguous KV cache.
+
+    q: (B, T, H, D) — the T-token tree window (slot 0 is the pending token,
+        slots 1.. are tree nodes in construction order).
+    k_cache / v_cache: (B, S, KV, D); the window's K/V are already written
+        at cache slots [lengths_b, lengths_b + T) (update-then-attend order,
+        matching ``forward_window``).
+    lengths: (B,) committed kv count — query rows attend every committed
+        slot [0, lengths_b).
+    win_mask: (B, T, T) bool — in-window attendance: query row t may attend
+        window slot t' iff win_mask[b, t, t'] (ancestor-or-self of the token
+        tree; a lower-triangular mask recovers the sequential causal window).
+    Returns (B, T, H, D).
+    """
+    B, T, H, D = q.shape
+    S = k_cache.shape[1]
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, T, KV, G, D)
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg,
+                        k_cache).astype(jnp.float32) * scale
+    kpos = jnp.arange(S)
+    committed = kpos[None, None, :] < lengths[:, None, None]      # (B, 1, S)
+    w = kpos[None, :] - lengths[:, None]                          # (B, S)
+    in_win = (w >= 0) & (w < T)
+    idx = jnp.broadcast_to(jnp.clip(w, 0, T - 1)[:, None, :], (B, T, S))
+    allow = jnp.take_along_axis(win_mask, idx, axis=2)            # (B, T, S)
+    valid = committed | (allow & in_win[:, None, :])
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v_cache)
+    return out.reshape(B, T, H, D)
+
+
+def paged_tree_attention_ref(q: jax.Array, k_pool: jax.Array,
+                             v_pool: jax.Array, page_table: jax.Array,
+                             lengths: jax.Array, win_mask: jax.Array,
+                             scale: float | None = None) -> jax.Array:
+    """``tree_attention_ref`` through a paged KV cache.
+
+    Pools are (P, ps, KV, D); page_table is (B, n_slots) int32 (-1 =
+    unmapped, masked out).  The window occupies logical positions
+    [lengths_b, lengths_b + T), already written through the page table.
+    """
+    B = q.shape[0]
+    ps = k_pool.shape[1]
+    n_slots = page_table.shape[1]
+    S = n_slots * ps
+    KV, D = k_pool.shape[2], k_pool.shape[3]
+    safe = jnp.maximum(page_table, 0)
+    k = k_pool[safe].reshape(B, S, KV, D)
+    v = v_pool[safe].reshape(B, S, KV, D)
+    # the committed prefix and the window are always fully mapped (the
+    # engine extends before writing), and the tree mask already excludes
+    # every slot outside [0, lengths) u window — so the gathered view can
+    # delegate straight to the contiguous oracle.
+    return tree_attention_ref(q, k, v, lengths, win_mask, scale=scale)
+
+
 def decode_attention_quantized_ref(q: jax.Array, k_cache: jax.Array,
                                    v_cache: jax.Array, k_scale: jax.Array,
                                    v_scale: jax.Array, lengths: jax.Array

@@ -69,7 +69,6 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     """Returns (lowered, meta) for one dry-run cell."""
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
-    chips = int(len(jax.devices()) if multi_pod else 256)
     training = shape.kind == "train"
     cfg = _cfg_for_dryrun(arch, training)
     model = build_model(cfg)

@@ -218,6 +218,26 @@ def causal_mask(Sq: int, Skv: int, offset: int = 0) -> jax.Array:
     return (kj <= qi)[None, None, None]
 
 
+def tree_window_mask(pos: jax.Array, window_mask: jax.Array,
+                     S_max: int) -> jax.Array:
+    """(B, 1, 1, T, S_max) attention mask for a token-tree verification
+    window written at cache SLOTS [pos_b, pos_b + T).
+
+    ``window_mask`` (B, T, T) is the tree's ancestor-or-self matrix: query
+    row t attends every committed slot [0, pos_b) plus window slot t' iff
+    ``window_mask[b, t, t']``.  With a lower-triangular matrix this equals
+    the plain causal window mask bit-for-bit (the sequential special case).
+    """
+    B, T = window_mask.shape[:2]
+    kj = jnp.arange(S_max)
+    committed = kj[None, None, :] < pos[:, None, None]            # (B, 1, S)
+    w = kj[None, :] - pos[:, None]                                # (B, S)
+    in_win = (w >= 0) & (w < T)
+    idx = jnp.broadcast_to(jnp.clip(w, 0, T - 1)[:, None, :], (B, T, S_max))
+    allow = jnp.take_along_axis(window_mask, idx, axis=2)         # (B, T, S)
+    return (committed | (allow & in_win[:, None, :]))[:, None, None]
+
+
 def attention_apply(params: Params, x: jax.Array, *, num_heads: int,
                     num_kv_heads: int, head_dim: int, positions: jax.Array,
                     mask: jax.Array | None, rope_theta: float | None,
@@ -344,8 +364,6 @@ def moe_apply(params: Params, x: jax.Array, mcfg: MoEConfig,
     # SPMD partitions gathers far better than scatters (a scatter into a
     # sharded (E*C, d) buffer makes GSPMD replicate one-hot u32 machinery of
     # the same size); the scatters below touch only O(E*C) int32/bool rows.
-    from repro.distributed.sharding import logical_constraint
-
     C = int(np.ceil(T * K / E * cf))
     flat_expert = expert_idx.reshape(-1)                        # (T*K,)
     flat_token = jnp.repeat(jnp.arange(T), K)

@@ -35,6 +35,7 @@ from .layers import (
     make_norm,
     mlp_apply,
     moe_apply,
+    tree_window_mask,
 )
 
 Params = Any
@@ -310,7 +311,8 @@ class DecoderLM:
                                             moe_capacity=moe_capacity)
         return self._logits(params, x), cache, aux
 
-    def forward_window(self, params, tokens, cache, pos):
+    def forward_window(self, params, tokens, cache, pos, window_mask=None,
+                       window_depth=None):
         """T new tokens against an existing cache.
 
         tokens: (B, T); pos: (B,) per-row write offsets (current lengths).
@@ -321,6 +323,13 @@ class DecoderLM:
         view: ``init_paged_cache`` pools plus a ``"pages"`` (B, n_slots)
         page table — writes route through the table, numerics are identical.
 
+        Token-TREE windows (multi-draft verification) pass ``window_mask``
+        (B, T, T), the tree's ancestor-or-self matrix, and ``window_depth``
+        (B, T) node depths: window token t keeps cache SLOT pos + t but
+        takes rope position pos + depth_t and attends committed KV plus its
+        in-window ancestors only.  Defaults (causal / arange) reproduce the
+        sequential window bit-for-bit.
+
         MoE layers dispatch with NO-DROP capacity here (cf = E/k => capacity =
         num window tokens): speculative verification must score with the exact
         model distribution, and capacity dropping is batch-coupled.  Training
@@ -329,9 +338,15 @@ class DecoderLM:
         x = self._embed(params, tokens)
         B, T, _ = x.shape
         S_max = self._cache_kv_capacity(cache)
-        positions = pos[:, None] + jnp.arange(T)[None, :]
-        kj = jnp.arange(S_max)[None, None, :]
-        mask = (kj <= positions[:, :, None])[:, None, None]  # (B,1,1,T,S)
+        if window_depth is None:
+            positions = pos[:, None] + jnp.arange(T)[None, :]
+        else:
+            positions = pos[:, None] + window_depth
+        if window_mask is None:
+            kj = jnp.arange(S_max)[None, None, :]
+            mask = (kj <= positions[:, :, None])[:, None, None]  # (B,1,1,T,S)
+        else:
+            mask = tree_window_mask(pos, window_mask, S_max)
         moe_capacity = self.no_drop_capacity if self.moe_cfg else None
         x, cache, _ = self._stack_forward(params, x, positions, mask,
                                           cache=cache, offset=pos,

@@ -22,8 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
 from repro.configs.base import InputShape, ModelConfig
 
 from .analysis import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16

@@ -210,11 +210,6 @@ class EngineBackend:
                draft_width: int = 1) -> np.ndarray:
         import jax
 
-        if draft_width != 1:
-            raise NotImplementedError(
-                "EngineBackend verifies one draft per device; the "
-                "'multidraft' scheme (capability 'multi_draft') needs "
-                "tree-attention verification — use SyntheticBackend")
         lengths = np.asarray(lengths, dtype=np.int64)
         rows = [self._row(r) for r in requests]
         B = self.batch_size
@@ -229,5 +224,6 @@ class EngineBackend:
         if key is None:
             key = jax.random.PRNGKey(int(rng.integers(2 ** 31)))
         self.state, res, _ = self.engine.spin_round(
-            self.state, full, key, vhat=self.vhat, freeze=freeze)
+            self.state, full, key, vhat=self.vhat, freeze=freeze,
+            draft_width=int(draft_width))
         return np.asarray(res.output_len, dtype=np.int64)[rows]

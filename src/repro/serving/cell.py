@@ -65,6 +65,7 @@ class RoundRecord:
     realized_goodput: float
     active: np.ndarray            # device participation mask
     rids: np.ndarray | None = None  # request ids, scheduler order
+    draft_width: int = 1          # multi-draft J the plan executed with
 
 
 @dataclasses.dataclass
@@ -382,7 +383,6 @@ class MultiSpinCell:
                                 mask=mask, **kw), dtype=np.int64)
 
     def _step_sync(self, active_reqs: list[Request], key=None) -> RoundRecord:
-        K = len(active_reqs)
         # --- step 1: system configuration ---
         self._refade()
         t_slm = np.array([r.T_S for r in active_reqs])
@@ -418,6 +418,7 @@ class MultiSpinCell:
             realized_goodput=float(np.sum(accepted) / t_round),
             active=active,
             rids=np.array([r.rid for r in active_reqs]),
+            draft_width=int(plan.draft_width),
         )
         self.history.append(rec)
         self._round_idx += 1
@@ -491,6 +492,7 @@ class MultiSpinCell:
             realized_goodput=float(np.sum(accepted) / step_time),
             active=mask,
             rids=np.array([r.rid for r in active_reqs]),
+            draft_width=int(plan.draft_width),
         )
         self.history.append(rec)
         self._round_idx += 1

@@ -35,8 +35,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.drafting import generate_drafts
-from repro.core.verification import VerifyResult, verify_drafts
+from repro.core.drafting import generate_draft_forest, generate_drafts
+from repro.core.token_tree import build_token_tree
+from repro.core.verification import verify_drafts, verify_tree
 from repro.models import build_model
 
 from .kv_cache import (
@@ -294,9 +295,18 @@ class SpecEngine:
 
     def spin_round(self, state: StreamState, lengths: np.ndarray,
                    key: jax.Array, vhat: int = 64,
-                   freeze: np.ndarray | None = None):
+                   freeze: np.ndarray | None = None, draft_width: int = 1,
+                   tree: bool | None = None):
         """One Multi-SPIN round with per-stream draft lengths (zero-padded to
         the max).  Returns (state, VerifyResult, draft_result).
+
+        ``draft_width`` J > 1 runs the TOKEN-TREE round instead (the
+        ``multidraft`` scheme): J drafts per stream packed into a
+        prefix-deduplicated tree, scored in ONE ancestor-masked target pass,
+        with the longest accepted root-to-leaf path committed
+        (``_spin_round_tree``).  ``tree=True`` forces the tree machinery at
+        J = 1 — it commits bit-identical tokens to the sequential path
+        (equivalence-tested), so this is only useful for testing.
 
         ``freeze`` marks streams that must NOT advance this round (retired
         requests, or the off half of a pipelined schedule).  Frozen rows
@@ -310,6 +320,11 @@ class SpecEngine:
         rows extend to cover the L+1 window up front and hand back every
         page past the accepted prefix afterwards.
         """
+        if tree is None:
+            tree = draft_width > 1
+        if tree:
+            return self._spin_round_tree(state, lengths, key, vhat=vhat,
+                                         freeze=freeze, J=int(draft_width))
         B = state.pending.shape[0]
         lengths = np.asarray(lengths, dtype=np.int64)
         frz_np = (np.zeros(B, dtype=bool) if freeze is None
@@ -419,3 +434,147 @@ class SpecEngine:
                                 draft_pos=new_draft_pos,
                                 committed=state.committed)
         return new_state, res, draft_res
+
+    # ------------------------------------------------------------------
+    # token-tree multi-draft round (SpecInfer-style verification)
+    # ------------------------------------------------------------------
+
+    def _spin_round_tree(self, state: StreamState, lengths: np.ndarray,
+                         key: jax.Array, vhat: int,
+                         freeze: np.ndarray | None, J: int):
+        """One multi-draft round: J drafts per stream, packed into a
+        prefix-deduplicated token tree, scored in ONE ancestor-masked target
+        pass, longest accepted root-to-leaf path committed.
+
+        Cache discipline: the W+1 tree window (W = J * L) occupies target
+        SLOTS [pos, pos + W] in construction order while each node keeps its
+        tree DEPTH as rope position; after acceptance the caches are
+        REPAIRED — one plain causal window over [pending, accepted path]
+        rewrites the surviving slots — and paged engines hand every page
+        past the accepted prefix (all dead branches) back to the pool.
+        At J = 1 the tree is a chain, the window IS the sequential window,
+        and the repair pass is skipped: tokens and caches are bit-identical
+        to ``spin_round``.
+        """
+        for role, cfg in (("target", self.target_cfg),
+                          ("draft", self.draft_cfg)):
+            # DecoderLM families only: the ancestor-masked window needs
+            # pointer-rollback attention caches AND the forward_window
+            # (window_mask=, window_depth=) signature — SSM/hybrid state
+            # cannot be pointer-rolled, enc-dec lacks the masked window
+            if cfg.family not in ("dense", "moe", "vlm"):
+                raise NotImplementedError(
+                    f"tree verification needs an attention decoder "
+                    f"({role} family {cfg.family!r}): divergent branches "
+                    f"commit by pointer rollback and one ancestor-masked "
+                    f"window pass (see ROADMAP open items)")
+        B = state.pending.shape[0]
+        lengths = np.asarray(lengths, dtype=np.int64)
+        frz_np = (np.zeros(B, dtype=bool) if freeze is None
+                  else np.asarray(freeze, dtype=bool).copy())
+        if self._retired:
+            frz_np[list(self._retired)] = True
+        L = int(lengths.max())
+        W = J * L
+        k_draft, k_verify = jax.random.split(key)
+
+        paged = self.cache_kind == "paged"
+        if paged:
+            tpos_np = np.asarray(state.target_pos)
+            dpos_np = np.asarray(state.draft_pos)
+            # the TARGET maps the whole W+1 tree window up front; the draft
+            # side only ever holds one run (L+1) — repair fits under both
+            cap = self.pages_per_stream * self.page_size
+            grown: list[tuple[int, int, int]] = []
+            try:
+                for b in range(B):
+                    if frz_np[b]:
+                        continue
+                    grown.append((b, self.t_pages.length(b),
+                                  self.d_pages.length(b)))
+                    self.t_pages.extend(b, min(int(tpos_np[b]) + W + 1, cap))
+                    self.d_pages.extend(b, min(int(dpos_np[b]) + L + 1, cap))
+            except PagePoolExhausted:
+                for b, t_len, d_len in grown:
+                    self.t_pages.truncate(b, t_len)
+                    self.d_pages.truncate(b, d_len)
+                raise
+            t_cache, d_cache = self._paged_views(B)
+        else:
+            t_cache, d_cache = self.t_cache, self.d_cache
+
+        # --- step 2: J drafting runs per stream (SLM) ---
+        forest = generate_draft_forest(self.draft, self.d_params, d_cache,
+                                       state.pending, state.draft_pos, L, J,
+                                       k_draft, vhat=vhat)
+        d_cache = forest.cache
+
+        # --- pack into the prefix-deduplicated tree (host-side) ---
+        ttree = build_token_tree(np.asarray(forest.tokens),
+                                 np.asarray(forest.probs),
+                                 np.asarray(forest.q_idx),
+                                 np.asarray(forest.q_val), lengths)
+        window = jnp.asarray(ttree.window_tokens(np.asarray(state.pending)),
+                             jnp.int32)                        # (B, W+1)
+        wmask = jnp.asarray(ttree.window_mask())
+        wdepth = jnp.asarray(ttree.window_depth(), jnp.int32)
+
+        # --- step 4: ONE ancestor-masked target pass over the whole tree ---
+        logits, t_cache = self.target.forward_window(
+            self.t_params, window, t_cache, state.target_pos,
+            window_mask=wmask, window_depth=wdepth)
+
+        res = verify_tree(k_verify, jnp.asarray(ttree.tokens),
+                          jnp.asarray(ttree.parents),
+                          jnp.asarray(ttree.depth),
+                          jnp.asarray(ttree.probs),
+                          jnp.asarray(ttree.paths), logits,
+                          jnp.asarray(ttree.q_idx),
+                          jnp.asarray(ttree.q_val),
+                          jnp.asarray(lengths, jnp.int32))
+
+        # --- step 5a: cache repair — rewrite the accepted path's K/V over
+        # the tree-ordered window slots (a J=1 chain already IS the
+        # sequential window: nothing to repair)
+        if J > 1:
+            n_max = int(np.asarray(res.accept_counts).max())
+            repair = jnp.concatenate(
+                [state.pending[:, None], res.output_tokens[:, :n_max]],
+                axis=1)                                        # (B, n_max+1)
+            _, t_cache = self.target.forward_window(
+                self.t_params, repair, t_cache, state.target_pos)
+            _, d_cache = self.draft.forward_window(
+                self.d_params, repair, d_cache, state.draft_pos)
+        self.t_cache = {k: v for k, v in t_cache.items() if k != "pages"} \
+            if paged else t_cache
+        self.d_cache = {k: v for k, v in d_cache.items() if k != "pages"} \
+            if paged else d_cache
+
+        # --- step 5b: commit + rollback (identical to the sequential round)
+        frz = jnp.asarray(frz_np)
+        adv = jnp.where(frz, 0, 1 + res.accept_counts)
+        new_target_pos = state.target_pos + adv
+        new_draft_pos = state.draft_pos + adv
+        sampled = jnp.take_along_axis(
+            res.output_tokens, res.accept_counts[:, None], axis=1)[:, 0]
+        new_pending = jnp.where(frz, state.pending, sampled)
+
+        out_np = np.asarray(res.output_tokens)
+        n_np = np.asarray(res.accept_counts)
+        for b in range(B):
+            if not frz_np[b]:
+                state.committed[b].extend(out_np[b, :n_np[b] + 1].tolist())
+
+        if paged:
+            # every page past the accepted prefix — all dead branches of the
+            # tree — returns to the pool here
+            ntp, ndp = np.asarray(new_target_pos), np.asarray(new_draft_pos)
+            for b in range(B):
+                if not frz_np[b]:
+                    self.t_pages.truncate(b, int(ntp[b]))
+                    self.d_pages.truncate(b, int(ndp[b]))
+
+        new_state = StreamState(pending=new_pending, target_pos=new_target_pos,
+                                draft_pos=new_draft_pos,
+                                committed=state.committed)
+        return new_state, res, forest

@@ -8,7 +8,6 @@ production mesh.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -13,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ASSIGNED_ARCHS, get_config
-from repro.models import build_model, has_prefix_embeds
+from repro.models import build_model
 
 
 def _prefix(cfg, B, key):

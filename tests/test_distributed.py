@@ -85,7 +85,7 @@ def test_moe_experts_sharded_over_model(arch):
 
 def test_per_chip_param_bytes_fit_hbm():
     """480B-class training state must fit 16GB/chip under the rules."""
-    from repro.distributed.sharding import axis_size, param_spec
+    from repro.distributed.sharding import param_spec
     from repro.models import build_model
 
     cfg = get_config("arctic-480b")

@@ -16,6 +16,10 @@ from repro.kernels.gather_softmax_prob import gather_softmax_prob_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.residual_sample import residual_sample_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.tree_attention import (
+    paged_tree_attention_pallas,
+    tree_attention_pallas,
+)
 
 
 def _tol(dtype):
@@ -152,6 +156,149 @@ def test_paged_attention_ops_dispatch(monkeypatch):
     got = ops.paged_attention(q, kp, vp, jnp.asarray(pt), jnp.asarray(lengths))
     want = ref.paged_attention_ref(q, kp, vp, jnp.asarray(pt),
                                    jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# tree attention (multi-draft token-tree verification window)
+# ---------------------------------------------------------------------------
+
+def _random_tree_mask(rng, B, T):
+    """Random ancestor-or-self matrices: a random parent forest over window
+    slots (parent index < node index), closed transitively — exactly the
+    structure ``core.token_tree`` produces."""
+    mask = np.zeros((B, T, T), dtype=bool)
+    mask[:, :, 0] = True
+    mask[:, 0, 1:] = False
+    for b in range(B):
+        for i in range(1, T):
+            parent = int(rng.integers(0, i))
+            mask[b, i] = mask[b, parent]
+            mask[b, i, i] = True
+    return mask
+
+
+@pytest.mark.parametrize("B,T,H,KV,D,S,bs", [
+    (2, 5, 4, 2, 64, 96, 32),       # GQA, ragged tiles
+    (1, 9, 4, 1, 64, 256, 128),     # MQA, deeper tree window
+    (3, 3, 8, 4, 128, 64, 64),      # MHA-ish
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tree_attention_matches_ref(B, T, H, KV, D, S, bs, dtype):
+    rng = np.random.default_rng(B * 10 + T)
+    ks = jax.random.split(jax.random.PRNGKey(B * 100 + T), 3)
+    q = jax.random.normal(ks[0], (B, T, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), dtype)
+    lengths = jnp.asarray(rng.integers(1, S - T + 1, B))
+    wm = jnp.asarray(_random_tree_mask(rng, B, T))
+    got = tree_attention_pallas(q, k, v, lengths, wm, bs=bs, interpret=True)
+    want = ref.tree_attention_ref(q, k, v, lengths, wm)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_tree_attention_chain_equals_causal_window():
+    """A lower-triangular win_mask must reproduce the SEQUENTIAL
+    verification window: tree attention is a strict generalization."""
+    B, T, H, KV, D, S = 2, 4, 4, 2, 64, 128
+    rng = np.random.default_rng(7)
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, T, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    lengths = jnp.asarray(rng.integers(1, S - T + 1, B))
+    tril = np.broadcast_to(np.tril(np.ones((T, T), bool)), (B, T, T))
+    got = tree_attention_pallas(q, k, v, lengths, jnp.asarray(tril),
+                                interpret=True)
+    # sequential semantics: window row t sits at slot lengths + t and
+    # attends every slot <= its own, i.e. [0, lengths + t + 1)
+    qg = np.asarray(q)
+    want = np.zeros_like(qg)
+    for b in range(B):
+        kc = jnp.asarray(np.asarray(k)[b:b + 1])
+        vc = jnp.asarray(np.asarray(v)[b:b + 1])
+        for t in range(T):
+            w = ref.decode_attention_ref(
+                jnp.asarray(qg[b:b + 1, t]), kc, vc,
+                jnp.asarray([int(lengths[b]) + t + 1]))
+            want[b, t] = np.asarray(w[0])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,T,H,KV,D,ps,P,NP", [
+    (2, 4, 4, 2, 64, 16, 24, 8),      # GQA
+    (3, 7, 4, 1, 64, 16, 48, 6),      # MQA, J*L+1-ish window
+    (1, 3, 8, 4, 128, 32, 12, 4),     # big pages
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_tree_attention_matches_ref(B, T, H, KV, D, ps, P, NP, dtype):
+    rng = np.random.default_rng(B * 10 + T)
+    ks = jax.random.split(jax.random.PRNGKey(B * 100 + T), 3)
+    q = jax.random.normal(ks[0], (B, T, H, D), dtype)
+    kp = jax.random.normal(ks[1], (P, ps, KV, D), dtype)
+    vp = jax.random.normal(ks[2], (P, ps, KV, D), dtype)
+    lengths = rng.integers(1, NP * ps - T + 1, B)
+    pt = _random_page_table(rng, B, NP, P, ps, lengths, T + 1)
+    wm = jnp.asarray(_random_tree_mask(rng, B, T))
+    got = paged_tree_attention_pallas(q, kp, vp, jnp.asarray(pt),
+                                      jnp.asarray(lengths), wm,
+                                      interpret=True)
+    want = ref.paged_tree_attention_ref(q, kp, vp, jnp.asarray(pt),
+                                        jnp.asarray(lengths), wm)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_paged_tree_chain_equals_paged_attention():
+    """Paged tree attention with a chain mask == the existing paged
+    verification-window kernel (same masking law, same layout)."""
+    B, T, H, KV, D, ps, P, NP = 2, 3, 4, 2, 64, 16, 20, 6
+    rng = np.random.default_rng(9)
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (B, T, H, D))
+    kp = jax.random.normal(ks[1], (P, ps, KV, D))
+    vp = jax.random.normal(ks[2], (P, ps, KV, D))
+    lengths = rng.integers(1, NP * ps - T - 1, B)
+    pt = _random_page_table(rng, B, NP, P, ps, lengths, T + 1)
+    tril = np.broadcast_to(np.tril(np.ones((T, T), bool)), (B, T, T))
+    got = paged_tree_attention_pallas(q, kp, vp, jnp.asarray(pt),
+                                      jnp.asarray(lengths),
+                                      jnp.asarray(tril), interpret=True)
+    # paged_attention's lengths convention: row t attends [0, lengths + t);
+    # the tree convention adds the row's own slot, so chain(base) ==
+    # paged_attention(base + 1)
+    want = paged_attention_pallas(q, kp, vp, jnp.asarray(pt),
+                                  jnp.asarray(lengths) + 1, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_tree_attention_ops_dispatch(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    from repro.kernels import ops
+    rng = np.random.default_rng(11)
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    B, T, H, KV, D, S = 2, 3, 4, 2, 64, 64
+    q = jax.random.normal(ks[0], (B, T, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    lengths = jnp.asarray(rng.integers(1, S - T + 1, B))
+    wm = jnp.asarray(_random_tree_mask(rng, B, T))
+    got = ops.tree_attention(q, k, v, lengths, wm)
+    want = ref.tree_attention_ref(q, k, v, lengths, wm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    ps, P, NP = 16, 16, 4
+    kp = jax.random.normal(ks[1], (P, ps, KV, D))
+    vp = jax.random.normal(ks[2], (P, ps, KV, D))
+    l2 = rng.integers(1, NP * ps - T + 1, B)
+    pt = _random_page_table(rng, B, NP, P, ps, l2, T)
+    got = ops.paged_tree_attention(q, kp, vp, jnp.asarray(pt),
+                                   jnp.asarray(l2), wm)
+    want = ref.paged_tree_attention_ref(q, kp, vp, jnp.asarray(pt),
+                                        jnp.asarray(l2), wm)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
 

@@ -3,8 +3,6 @@
 import subprocess
 import sys
 
-import pytest
-
 
 def _run(args, timeout=1200):
     # CPU-only hosts spend most of the wall-clock in XLA compilation for

@@ -1,7 +1,6 @@
 """Roofline analysis tests: HLO collective parsing + analytic term model."""
 
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config

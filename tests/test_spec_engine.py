@@ -8,7 +8,6 @@ import pytest
 
 from repro.api import CellConfig, EngineBackend, MultiSpinCell, Request
 from repro.configs import get_config
-from repro.models import build_model
 from repro.serving import SpecEngine
 
 

@@ -1,7 +1,5 @@
 """Training substrate tests: optimizer, data, train loop, checkpointing."""
 
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -20,7 +18,7 @@ from repro.training import (
     init_optimizer,
     make_train_step,
 )
-from repro.training.optimizer import global_norm, schedule
+from repro.training.optimizer import schedule
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,311 @@
+"""Token-tree multi-draft verification: packing, acceptance, and the engine.
+
+Coverage per the tree-attention issue:
+  * trie packing — prefix dedup, parent ordering, ancestor-mask closure
+  * ``verify_tree`` at J=1 is BIT-IDENTICAL to ``verify_drafts`` (same rng
+    stream, same outputs)
+  * engine tree rounds at J=1 commit bit-identical tokens to the sequential
+    path on BOTH cache layouts
+  * J>1 engine rounds: committed text stays exact (incremental-consistency
+    invariant through the cache-repair pass), dead-branch pages return to
+    the pool every round
+  * acceptance statistics match the ``multidraft`` scheme's max-of-J
+    analytic model (the SyntheticBackend law) — exactly in the self-draft
+    limit, to tolerance with a real draft model
+  * the full cell serves ``multidraft`` on an ``EngineBackend`` with J >= 2
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.token_tree import DEAD, ROOT, build_token_tree
+from repro.core.verification import truncate_renormalize, verify_drafts, verify_tree
+from repro.serving import SpecEngine
+
+
+def _engine(max_len=96, paged=False, num_pages=None, self_draft=False):
+    tcfg = get_config("qwen2.5-3b").smoke()
+    if self_draft:
+        dcfg = tcfg.replace(name="draft-self")
+    else:
+        dcfg = tcfg.replace(
+            num_layers=1,
+            d_model=32,
+            num_heads=2,
+            num_kv_heads=1,
+            head_dim=16,
+            d_ff=64,
+            name="draft-smoke",
+        )
+    kw = {}
+    if paged:
+        kw = {"cache_kind": "paged", "num_pages": num_pages or 96}
+    eng = SpecEngine(tcfg, dcfg, max_len=max_len, **kw)
+    eng.init_params(jax.random.PRNGKey(0))
+    if self_draft:
+        eng.d_params = eng.t_params
+    return eng, tcfg
+
+
+# ---------------------------------------------------------------------------
+# trie packing
+# ---------------------------------------------------------------------------
+
+
+def test_build_token_tree_dedups_shared_prefixes():
+    # two drafts sharing a 2-token prefix, one fully distinct
+    tokens = np.array([[[5, 6, 7], [5, 6, 8], [9, 6, 7]]])
+    probs = np.full((1, 3, 3), 0.5, np.float32)
+    q_idx = np.zeros((1, 3, 3, 4), np.int32)
+    q_val = np.zeros((1, 3, 3, 4), np.float32)
+    tree = build_token_tree(tokens, probs, q_idx, q_val, np.array([3]))
+    assert int(tree.n_nodes[0]) == 7  # 9 drafted positions, 2 deduped
+    # drafts 0 and 1 share nodes at depth 1 and 2
+    assert tree.paths[0, 0, 0] == tree.paths[0, 1, 0]
+    assert tree.paths[0, 0, 1] == tree.paths[0, 1, 1]
+    assert tree.paths[0, 0, 2] != tree.paths[0, 1, 2]
+    assert tree.paths[0, 2, 0] != tree.paths[0, 0, 0]
+    # parents precede children; roots carry ROOT, padding carries DEAD
+    n = int(tree.n_nodes[0])
+    for i in range(n):
+        assert tree.parents[0, i] < i
+    assert tree.parents[0, 0] == ROOT
+    assert np.all(tree.parents[0, n:] == DEAD)
+    assert np.all(tree.depth[0, :n] >= 1)
+
+
+def test_window_mask_is_ancestor_closure():
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, 50, (2, 3, 4))
+    probs = rng.uniform(0.1, 1.0, (2, 3, 4)).astype(np.float32)
+    q_idx = np.zeros((2, 3, 4, 4), np.int32)
+    q_val = np.zeros((2, 3, 4, 4), np.float32)
+    tree = build_token_tree(tokens, probs, q_idx, q_val, np.array([4, 3]))
+    mask = tree.window_mask()
+    B, T, _ = mask.shape
+    assert T == tree.width + 1
+    for b in range(B):
+        assert mask[b, 0, 0] and not mask[b, 0, 1:].any()
+        for i in range(int(tree.n_nodes[b])):
+            row = mask[b, i + 1]
+            # expected: pending + self + transitive parents
+            expect = np.zeros(T, bool)
+            expect[0] = True
+            j = i
+            while j >= 0:
+                expect[j + 1] = True
+                j = int(tree.parents[b, j])
+            np.testing.assert_array_equal(row, expect)
+
+
+def test_chain_tree_mask_is_causal():
+    tokens = np.arange(4).reshape(1, 1, 4)
+    probs = np.full((1, 1, 4), 0.5, np.float32)
+    q = np.zeros((1, 1, 4, 2))
+    tree = build_token_tree(tokens, probs, q, q, np.array([4]))
+    np.testing.assert_array_equal(tree.window_mask()[0], np.tril(np.ones((5, 5), bool)))
+    np.testing.assert_array_equal(tree.window_depth()[0], np.arange(5))
+
+
+# ---------------------------------------------------------------------------
+# verify_tree == verify_drafts at J=1 (bit-identical rng stream)
+# ---------------------------------------------------------------------------
+
+
+def test_verify_tree_chain_bit_identical_to_sequential():
+    B, L, V, vhat = 3, 4, 64, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    draft_tokens = jax.random.randint(ks[0], (B, L), 0, V)
+    q_dense = jax.random.dirichlet(ks[1], jnp.ones((V,)) * 0.3, (B, L))
+    q_idx, q_val = truncate_renormalize(q_dense, vhat)
+    probs = jax.random.uniform(ks[2], (B, L), minval=0.05, maxval=1.0)
+    logits = jax.random.normal(ks[3], (B, L + 1, V)) * 2.0
+    draft_len = jnp.array([4, 2, 3])
+
+    key = jax.random.PRNGKey(42)
+    seq = verify_drafts(
+        key,
+        draft_tokens,
+        probs,
+        logits,
+        q_idx=q_idx,
+        q_val=q_val,
+        draft_len=draft_len,
+    )
+    tree = build_token_tree(
+        np.asarray(draft_tokens)[:, None, :],
+        np.asarray(probs)[:, None, :],
+        np.asarray(q_idx)[:, None],
+        np.asarray(q_val)[:, None],
+        np.asarray(draft_len),
+    )
+    got = verify_tree(
+        key,
+        jnp.asarray(tree.tokens),
+        jnp.asarray(tree.parents),
+        jnp.asarray(tree.depth),
+        jnp.asarray(tree.probs),
+        jnp.asarray(tree.paths),
+        logits,
+        jnp.asarray(tree.q_idx),
+        jnp.asarray(tree.q_val),
+        draft_len,
+    )
+    np.testing.assert_array_equal(np.asarray(got.accept_counts), np.asarray(seq.accept_counts))
+    np.testing.assert_array_equal(np.asarray(got.output_tokens), np.asarray(seq.output_tokens))
+    np.testing.assert_array_equal(np.asarray(got.output_len), np.asarray(seq.output_len))
+    np.testing.assert_array_equal(np.asarray(got.accept_mask), np.asarray(seq.accept_mask))
+    assert np.all(np.asarray(got.winner) == 0)
+
+
+# ---------------------------------------------------------------------------
+# engine: tree-vs-sequential equivalence at J=1
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_engine_tree_j1_commits_identical_tokens(paged):
+    def run(tree):
+        eng, tcfg = _engine(paged=paged)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (3, 10), 0, tcfg.vocab_size)
+        state = eng.start(prompts)
+        for r in range(4):
+            lengths = np.array([3, 5, 2])
+            state, res, _ = eng.spin_round(state, lengths, jax.random.PRNGKey(10 + r), tree=tree)
+        return [list(c) for c in state.committed]
+
+    assert run(False) == run(True)
+
+
+# ---------------------------------------------------------------------------
+# engine: J > 1 tree rounds
+# ---------------------------------------------------------------------------
+
+
+def test_engine_multidraft_rounds_stay_exact():
+    """After tree rounds, the repaired cache must reproduce from-scratch
+    logits for the committed sequence (the rollback invariant of the
+    sequential engine, now across divergent branches)."""
+    eng, tcfg = _engine(paged=True, num_pages=96)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, tcfg.vocab_size)
+    state = eng.start(prompts)
+    lengths = np.array([4, 3])
+    for r in range(3):
+        state, res, _ = eng.spin_round(state, lengths, jax.random.PRNGKey(77 + r), draft_width=3)
+        n = np.asarray(res.output_len)
+        assert np.all(n >= 1) and np.all(n <= lengths + 1)
+    cache = dict(eng.t_cache, pages=jnp.asarray(eng.t_pages.page_table(range(2))))
+    pend = state.pending[:, None]
+    inc, _ = eng.target.forward_window(eng.t_params, pend, cache, state.target_pos)
+    for b in range(2):
+        assert state.committed[b][-1] == int(state.pending[b])
+        seq = jnp.asarray(state.committed[b])[None, :]
+        full, _ = eng.target.apply(eng.t_params, seq)
+        np.testing.assert_allclose(
+            np.asarray(inc[b, 0]),
+            np.asarray(full[0, -1]),
+            rtol=2e-3,
+            atol=2e-3,
+        )
+
+
+def test_engine_multidraft_returns_dead_branch_pages():
+    eng, tcfg = _engine(paged=True, num_pages=96)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, tcfg.vocab_size)
+    state = eng.start(prompts)
+    for r in range(3):
+        key = jax.random.PRNGKey(5 + r)
+        state, res, _ = eng.spin_round(state, np.array([4, 4]), key, draft_width=3)
+        # after the round, mapped pages cover exactly the accepted prefixes
+        for b in range(2):
+            tp = int(np.asarray(state.target_pos)[b])
+            assert eng.t_pages.length(b) == tp
+            assert len(eng.t_pages._tables[b]) == eng.t_pages.pages_for(tp)
+    eng.t_pages.check_invariants()
+    eng.d_pages.check_invariants()
+
+
+def test_engine_selfdraft_multidraft_accepts_everything():
+    """Draft == target with no truncation: every tree node is accepted, so
+    output_len == L + 1 every round — exactly the SyntheticBackend law at
+    alpha = 1 (deterministic acceptance-statistics parity)."""
+    eng, tcfg = _engine(max_len=128, self_draft=True)
+    B, M, L = 2, 8, 3
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, M), 0, tcfg.vocab_size)
+    state = eng.start(prompts)
+    for r in range(3):
+        state, res, _ = eng.spin_round(
+            state,
+            np.full(B, L),
+            jax.random.PRNGKey(5 + r),
+            vhat=tcfg.vocab_size,
+            draft_width=2,
+        )
+        assert np.all(np.asarray(res.output_len) == L + 1)
+
+
+def test_multidraft_acceptance_statistics_match_analytic():
+    """Mean committed tokens per round must track the multidraft scheme's
+    max-of-J model  E[N] = 1 + sum_l (1 - (1 - a^l)^J)  at the engine's own
+    measured per-node acceptance rate a (loose band: the model assumes
+    position-independent acceptance and independent runs; the trie shares
+    prefix outcomes, which can only lower the engine mean slightly)."""
+    eng, tcfg = _engine(max_len=160, paged=True, num_pages=120)
+    B, L, J, rounds = 3, 4, 3, 12
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (B, 8), 0, tcfg.vocab_size)
+    state = eng.start(prompts)
+    accepts, valids, lens = [], [], []
+    for r in range(rounds):
+        key = jax.random.PRNGKey(100 + r)
+        state, res, _ = eng.spin_round(state, np.full(B, L), key, draft_width=J)
+        accepts.append(np.asarray(res.accept_mask))
+        valids.append(np.asarray(res.node_valid))
+        lens.append(np.asarray(res.output_len))
+    acc = np.concatenate(accepts).ravel()
+    val = np.concatenate(valids).ravel()
+    alpha_hat = acc[val].mean()
+    ls = np.arange(1, L + 1)
+    expect = 1.0 + np.sum(1.0 - (1.0 - alpha_hat**ls) ** J)
+    measured = float(np.concatenate(lens).mean())
+    assert abs(measured - expect) / expect < 0.30, (measured, expect, alpha_hat)
+
+
+# ---------------------------------------------------------------------------
+# cell integration: the multidraft scheme SERVED on an EngineBackend
+# ---------------------------------------------------------------------------
+
+
+def test_cell_multidraft_on_engine_backend():
+    from repro.api import CellConfig, EngineBackend, MultiSpinCell, Request
+
+    eng, tcfg = _engine(max_len=160, paged=True, num_pages=2 * 3 * 10)
+    K = 3
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (K, 8), 0, tcfg.vocab_size)
+    backend = EngineBackend(eng, eng.start(prompts))
+    cfg = CellConfig(
+        scheme="multidraft",
+        scheme_params={"J_min": 2, "J_max": 3},
+        max_batch=K,
+        L_max=5,
+        seed=0,
+    )
+    cell = MultiSpinCell(cfg, backend=backend)
+    rng = np.random.default_rng(0)
+    for i in range(K):
+        cell.submit(
+            Request(
+                rid=i,
+                prompt_len=8,
+                max_new_tokens=10**9,
+                alpha=float(rng.choice([0.71, 0.86])),
+                T_S=0.009,
+            )
+        )
+    out = cell.run(4)
+    assert out["tokens"] >= 4 * K  # >= 1 committed token per device per round
+    assert all(rec.draft_width >= 2 for rec in cell.history)
+    eng.t_pages.check_invariants()
+    eng.d_pages.check_invariants()

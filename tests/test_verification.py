@@ -12,7 +12,6 @@ import pytest
 
 from repro.core.drafting import generate_drafts
 from repro.core.verification import (
-    VerifyResult,
     sparse_to_dense,
     truncate_renormalize,
     verify_drafts,
