@@ -26,12 +26,14 @@ Usage::
 from __future__ import annotations
 
 import argparse
+import os
 
 import numpy as np
 
 from repro.api import CellConfig, MultiSpinCell, Request
 
 ALPHAS = [0.71, 0.74, 0.86, 0.93]
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_churn.json")
 
 
 def _poisson_churn_cell(cell: MultiSpinCell, rounds: int, rate: float,
@@ -60,15 +62,25 @@ def _poisson_churn_cell(cell: MultiSpinCell, rounds: int, rate: float,
                 cell.leave(req.rid)
                 left_early += 1
     stats = cell.scheduler.stats
-    return {
+    drafted = sum(int(r.lengths[r.active].sum()) for r in cell.history)
+    positions = sum(int(np.maximum(r.accepted - 1, 0)[r.active].sum())
+                    for r in cell.history)
+    out = {
         "submitted": submitted,
         "completed": stats.completed,
         "left_early": left_early,
         "idle_rounds": idle_rounds,
         "tokens": stats.total_tokens,
         "goodput": stats.goodput,
+        "acceptance": positions / drafted if drafted else 0.0,
         "queued_at_end": len(cell.scheduler.queue),
     }
+    if stats.ttft_s:
+        from repro.serving.gateway.loadgen import percentile
+        out["ttft_sim_s"] = {"p50": percentile(stats.ttft_s, 50),
+                             "p95": percentile(stats.ttft_s, 95),
+                             "n": len(stats.ttft_s)}
+    return out
 
 
 def run_synthetic(rounds: int, rate: float, p_leave: float, max_batch: int,
@@ -126,17 +138,24 @@ def run(fast: bool = True, engine: bool = False, smoke: bool = False,
         kw = {} if mean_tokens is None else {"mean_tokens": mean_tokens}
         out = fn(rounds, rate, p_leave, max_batch, scheme, seed, **kw)
         ok = out["completed"] > 0 and out["tokens"] > 0
+        ttft = out.get("ttft_sim_s")
         rows.append({
             "name": f"churn/{'engine' if engine else 'synthetic'}/{scheme}",
             "us_per_call": "",
             "derived": (f"goodput={out['goodput']:.1f} "
-                        f"completed={out['completed']}/{out['submitted']} "
+                        f"acceptance={out['acceptance']:.3f} "
+                        + (f"ttft_p50={ttft['p50']:.2f}s "
+                           f"ttft_p95={ttft['p95']:.2f}s " if ttft else "")
+                        + f"completed={out['completed']}/{out['submitted']} "
                         f"left_early={out['left_early']} "
                         f"queued={out['queued_at_end']} ok={ok}"),
             **out,
         })
         if smoke and not ok:
             raise SystemExit(f"churn smoke FAILED: {out}")
+    if smoke:
+        from .common import write_rows_json
+        write_rows_json(BENCH_PATH, rows)
     return rows
 
 

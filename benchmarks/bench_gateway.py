@@ -1,0 +1,186 @@
+"""End-to-end gateway benchmark: Poisson SSE load against a LIVE cell.
+
+Unlike every other bench (which drives ``MultiSpinCell`` directly), this one
+measures the full serving path — HTTP parse, SSE streaming, the gateway's
+action queue, the step thread — under the open-loop load generator:
+
+    in-process ``MultiSpinGateway`` (port 0) <- ``run_loadgen`` burst
+
+Reported: delivered tokens/s (REAL wall), TTFT p50/p95 (real wall, send ->
+first streamed round), end-to-end latency percentiles, and the acceptance
+rate scraped back from ``/metrics`` — the scrape doubles as a format check.
+
+``--smoke`` is the CI gate: a small synthetic burst that must stream every
+request to completion, then writes ``BENCH_gateway.json`` at the repo root
+(tokens/s + TTFT + acceptance) as the tracked artifact.  ``--backend
+engine`` runs the same burst against a real paged smoke-scale SpecEngine.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_gateway            # synthetic
+    PYTHONPATH=src python -m benchmarks.bench_gateway --smoke    # CI gate
+    PYTHONPATH=src python -m benchmarks.bench_gateway --backend engine
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import os
+import re
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_gateway.json")
+
+
+def _build_cell(backend: str, max_batch: int, scheme: str, seed: int):
+    from repro.api import CellConfig, MultiSpinCell
+
+    cfg = CellConfig(scheme=scheme, max_batch=max_batch, seed=seed,
+                     t_ver_fix=0.035, t_ver_lin=0.0177, L_max=8)
+    if backend == "synthetic":
+        return MultiSpinCell(cfg)
+    # real paged smoke-scale engine (same shape as bench_churn --engine)
+    import jax
+
+    from repro.api import EngineBackend, SpecEngine
+    from repro.configs import get_config
+
+    tcfg = get_config("qwen2.5-3b").smoke()
+    dcfg = tcfg.replace(num_layers=1, d_model=32, num_heads=2, num_kv_heads=1,
+                        head_dim=16, d_ff=64, name="draft-smoke")
+    eng = SpecEngine(tcfg, dcfg, max_len=128, cache_kind="paged",
+                     num_pages=max_batch * 2 * (128 // 16))
+    eng.init_params(jax.random.PRNGKey(seed))
+    prompts = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                 (max_batch, 8), 0, tcfg.vocab_size)
+    be = EngineBackend(eng, eng.start(prompts), keep_finished_tokens=True)
+    return MultiSpinCell(cfg, backend=be)
+
+
+def _scrape_acceptance(metrics_text: str) -> float:
+    m = re.search(r"^multispin_acceptance_rate ([0-9.eE+-]+)$",
+                  metrics_text, re.M)
+    if m is None:
+        raise SystemExit("gateway /metrics scrape FAILED: "
+                         "multispin_acceptance_rate missing")
+    return float(m.group(1))
+
+
+async def _run(backend: str, n_requests: int, rate: float, max_batch: int,
+               scheme: str, seed: int, max_new: tuple) -> dict:
+    from repro.serving.gateway import (
+        GatewayConfig,
+        LoadGenConfig,
+        MultiSpinGateway,
+        run_loadgen,
+    )
+
+    cell = _build_cell(backend, max_batch, scheme, seed)
+    gw = MultiSpinGateway(cell, GatewayConfig(port=0, idle_wait_s=0.02))
+    await gw.start()
+    try:
+        report = await run_loadgen(
+            "127.0.0.1", gw.port,
+            LoadGenConfig(rate_per_s=rate, n_requests=n_requests,
+                          max_new_tokens_choices=max_new, seed=seed))
+        metrics_text = await _scrape(gw.port)
+        stats = await _stats(gw.port)
+    finally:
+        await gw.stop()
+    report["acceptance"] = _scrape_acceptance(metrics_text)
+    report["rounds"] = stats["rounds_total"]
+    report["goodput_sim_committed"] = (
+        stats["last_round"]["goodput_committed"] if stats["last_round"]
+        else 0.0)
+    report["goodput_sim_capped"] = (
+        stats["last_round"]["goodput_capped"] if stats["last_round"] else 0.0)
+    return report
+
+
+async def _scrape(port: int) -> str:
+    from repro.serving.gateway import GatewayClient
+    return await GatewayClient(port=port).metrics()
+
+
+async def _stats(port: int) -> dict:
+    from repro.serving.gateway import GatewayClient
+    return await GatewayClient(port=port).stats()
+
+
+def run(fast: bool = True, backend: str = "synthetic", smoke: bool = False,
+        n_requests: int | None = None, rate: float = 16.0,
+        max_batch: int = 8, scheme: str = "hete", seed: int = 0
+        ) -> list[dict]:
+    if smoke:
+        backend_, n, max_new = backend, 12, (4, 8)
+        rate = 32.0
+    else:
+        backend_ = backend
+        n = n_requests if n_requests is not None else (16 if fast else 64)
+        max_new = (8, 16, 32)
+    if backend_ == "engine":
+        max_batch = min(max_batch, 3)
+        max_new = (4, 8)
+    report = asyncio.run(_run(backend_, n, rate, max_batch, scheme, seed,
+                              max_new))
+    ok = report["n_error"] == 0 and report["tokens"] > 0
+    row = {
+        "name": f"gateway/{backend_}/{scheme}",
+        "us_per_call": "",
+        "derived": (f"tokens_per_s={report['tokens_per_s']:.1f} "
+                    f"ttft_p50={report['ttft_s']['p50'] * 1e3:.1f}ms "
+                    f"ttft_p95={report['ttft_s']['p95'] * 1e3:.1f}ms "
+                    f"acceptance={report['acceptance']:.3f} "
+                    f"ok={ok}"),
+        "tokens_per_s": report["tokens_per_s"],
+        "tokens": report["tokens"],
+        "n_ok": report["n_ok"],
+        "n_error": report["n_error"],
+        "errors": report["errors"],
+        "wall_s": report["wall_s"],
+        "rounds": report["rounds"],
+        "ttft_s": report["ttft_s"],
+        "latency_s": report["latency_s"],
+        "acceptance": report["acceptance"],
+        "goodput_sim_committed": report["goodput_sim_committed"],
+        "goodput_sim_capped": report["goodput_sim_capped"],
+    }
+    if smoke:
+        if not ok:
+            raise SystemExit(f"gateway smoke FAILED: {row['derived']} "
+                             f"errors={report['errors']}")
+        from .common import write_rows_json
+        write_rows_json(BENCH_PATH, [row])
+    return [row]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", default="synthetic",
+                    choices=("synthetic", "engine"))
+    ap.add_argument("--n-requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=16.0,
+                    help="Poisson arrivals per REAL second")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--scheme", default="hete")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: small burst, writes BENCH_gateway.json "
+                         "at the repo root, exits non-zero on any error")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="dump rows as JSON (CI artifact)")
+    args = ap.parse_args()
+    rows = run(fast=not args.full, backend=args.backend, smoke=args.smoke,
+               n_requests=args.n_requests, rate=args.rate,
+               max_batch=args.max_batch, scheme=args.scheme, seed=args.seed)
+    for r in rows:
+        print(r["name"], r["derived"])
+    if args.json:
+        from .common import write_rows_json
+        write_rows_json(args.json, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ def main() -> None:
         bench_bandwidth_sweep,
         bench_beyond,
         bench_churn,
+        bench_gateway,
         bench_goodput_vs_L,
         bench_optimal_L,
         bench_protocols,
@@ -43,6 +44,7 @@ def main() -> None:
         "bandwidth_sweep": lambda: bench_bandwidth_sweep.run(fast),
         "scaling_K": lambda: bench_scaling_K.run(fast),
         "churn": lambda: bench_churn.run(fast),
+        "gateway": lambda: bench_gateway.run(fast),
         "beyond": lambda: bench_beyond.run(fast),
         "roofline": lambda: roofline.run(fast),
     }

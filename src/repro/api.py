@@ -47,6 +47,13 @@ from repro.serving.cell import (  # noqa: F401
     MultiSpinCell,
     RoundRecord,
 )
+from repro.serving.gateway import (  # noqa: F401
+    GatewayClient,
+    GatewayConfig,
+    MetricsHub,
+    MultiSpinGateway,
+    RoundMetrics,
+)
 from repro.serving.scheduler import (  # noqa: F401
     Request,
     RoundScheduler,
@@ -60,11 +67,16 @@ __all__ = [
     "ChannelConfig",
     "ChannelState",
     "EngineBackend",
+    "GatewayClient",
+    "GatewayConfig",
+    "MetricsHub",
     "MultiSpinCell",
+    "MultiSpinGateway",
     "MultiSpinController",
     "PagedKVCache",
     "PagePoolExhausted",
     "Request",
+    "RoundMetrics",
     "RoundPlan",
     "RoundRecord",
     "RoundScheduler",

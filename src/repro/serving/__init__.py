@@ -11,8 +11,12 @@ from .cell import CellConfig, MultiSpinCell, RoundRecord  # noqa: F401
 from .scheduler import Request, RoundScheduler, SchedulerStats  # noqa: F401
 
 # kv_cache imports jax too (snapshot selection), so the paged-cache names
-# stay lazy alongside the engine
-_LAZY = ("SpecEngine", "StreamState", "PagedKVCache", "PagePoolExhausted")
+# stay lazy alongside the engine; the gateway is stdlib-only but lazy to
+# keep `import repro.serving` at its current cost
+_GATEWAY = ("MultiSpinGateway", "GatewayConfig", "GatewayClient",
+            "MetricsHub", "RoundMetrics")
+_LAZY = ("SpecEngine", "StreamState", "PagedKVCache",
+         "PagePoolExhausted") + _GATEWAY
 
 
 def __getattr__(name):
@@ -22,6 +26,9 @@ def __getattr__(name):
     if name in ("PagedKVCache", "PagePoolExhausted"):
         from . import kv_cache
         return getattr(kv_cache, name)
+    if name in _GATEWAY:
+        from . import gateway
+        return getattr(gateway, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

@@ -98,12 +98,21 @@ class EngineBackend:
     """
 
     def __init__(self, engine, state, vhat: int = 64,
-                 admit_headroom: int = 32):
+                 admit_headroom: int = 32,
+                 keep_finished_tokens: bool = False):
         self.engine = engine
         self.state = state
         self.vhat = vhat
         self.admit_headroom = admit_headroom
+        # the gateway streams committed tokens per round; a request's final
+        # round retires its row INSIDE cell.step (release -> pages freed,
+        # row recyclable), so with this flag the generated suffix is kept
+        # as a tombstone until the consumer calls ``drop_finished`` —
+        # off by default so batch sessions carry no extra state
+        self.keep_finished_tokens = keep_finished_tokens
+        self._finished_tokens: dict[int, list[int]] = {}
         self._row_of: dict[int, int] = {}
+        self._prompt_len_of: dict[int, int] = {}
         self._start_rows = int(state.pending.shape[0])
         self._next_start_row = 0
 
@@ -159,13 +168,41 @@ class EngineBackend:
 
     def release(self, requests: Sequence) -> None:
         """Hand the engine rows of retired/departed requests back: their
-        pages return to the pool and the rows become recyclable."""
-        if not self.dynamic:
-            return
+        pages return to the pool and the rows become recyclable.  With
+        ``keep_finished_tokens`` the generated suffix survives as a
+        tombstone (``stream_tokens``) until ``drop_finished``."""
         for r in requests:
+            if self.keep_finished_tokens and r.rid in self._row_of:
+                self._finished_tokens[r.rid] = self.stream_tokens(r.rid)
+            if not self.dynamic:
+                continue
             row = self._row_of.pop(r.rid, None)
             if row is not None:
                 self.engine.retire_stream(row)
+
+    # -- telemetry / streaming accessors --------------------------------
+
+    def pool_stats(self) -> dict:
+        """Engine memory snapshot (paged: page-pool occupancy) for the
+        cell's RoundRecord and the metrics hub."""
+        return self.engine.pool_stats()
+
+    def stream_tokens(self, rid: int) -> list[int]:
+        """The committed tokens a request has GENERATED so far (prompt
+        excluded), from its live engine row or its post-retirement
+        tombstone; [] for unknown rids.  The gateway slices this against
+        the scheduler's capped per-request counts, so uncapped final-round
+        overshoot is never streamed."""
+        row = self._row_of.get(rid)
+        if row is None:
+            return list(self._finished_tokens.get(rid, []))
+        toks = self.state.committed[row]
+        return [int(t) for t in toks[self._prompt_len_of[rid]:]]
+
+    def drop_finished(self, rid: int) -> None:
+        """Forget a finished request's token tombstone (called by the
+        gateway once the final tokens are streamed out)."""
+        self._finished_tokens.pop(rid, None)
 
     # -- row mapping ----------------------------------------------------
 
@@ -188,6 +225,7 @@ class EngineBackend:
 
     def _row(self, r) -> int:
         if r.rid not in self._row_of:
+            self._prompt_len_of[r.rid] = self._prompt_len(r)
             if self._next_start_row < self._start_rows:
                 self._row_of[r.rid] = self._next_start_row
                 self._next_start_row += 1

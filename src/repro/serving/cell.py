@@ -66,6 +66,17 @@ class RoundRecord:
     active: np.ndarray            # device participation mask
     rids: np.ndarray | None = None  # request ids, scheduler order
     draft_width: int = 1          # multi-draft J the plan executed with
+    # per-phase breakdown of the multi-access phase (telemetry satellite):
+    # each is the MAX over deadline survivors of that phase alone, so the
+    # phases overlap across devices and t_draft + t_upload >= t_ma in
+    # general (equality when one straggler dominates both phases).
+    # Server-drafting schemes fold their whole latency into t_draft.
+    t_draft: float = 0.0
+    t_upload: float = 0.0
+    # backend memory snapshot taken AFTER this round retired its finished
+    # requests (the occupancy the next admission decision sees); None for
+    # backends without a pool_stats hook (synthetic draws)
+    pool_stats: dict | None = None
 
 
 @dataclasses.dataclass
@@ -177,11 +188,39 @@ class MultiSpinCell:
         self.rates = np.zeros(0)
         self.history: list[RoundRecord] = []
         self.rejected: list[Request] = []   # permanently-unservable requests
+        # narrow observer surface (telemetry/gateway attach from outside;
+        # the cell never imports them): objects with any of the optional
+        # methods on_admit(requests) / on_reject(request) / on_round(record)
+        self._listeners: list = []
         self._round_idx = 0
         self._pending_ver = 0.0      # pipelined: verification still in flight
         self._pending_rids: set[int] = set()   # whose tokens it verifies
         self._drained_ver = 0.0      # pipelined: trailing ver already drained
         self._pipe_parity = 0
+
+    # ------------------------------------------------------------------
+    # observers (telemetry hook surface)
+    # ------------------------------------------------------------------
+
+    def add_listener(self, listener):
+        """Attach an observer.  The cell calls the observer's OPTIONAL
+        methods at lifecycle points — ``on_admit(requests)`` when requests
+        enter the active set, ``on_reject(request)`` when a permanently
+        unservable request is evicted, ``on_round(record)`` after every
+        executed round (post-retirement, so scheduler stats are current).
+        This keeps the dependency one-way: ``MetricsHub``/the gateway
+        import the cell, never the reverse.  Returns the listener."""
+        self._listeners.append(listener)
+        return listener
+
+    def remove_listener(self, listener):
+        self._listeners.remove(listener)
+
+    def _emit(self, event: str, *args):
+        for listener in self._listeners:
+            fn = getattr(listener, event, None)
+            if fn is not None:
+                fn(*args)
 
     # ------------------------------------------------------------------
     # request lifecycle
@@ -212,7 +251,7 @@ class MultiSpinCell:
             can_admit=getattr(self.backend, "can_admit", None),
             on_admit=(lambda r: bind([r])) if bind is not None else None,
             servable=getattr(self.backend, "servable", None),
-            on_reject=self.rejected.append)
+            on_reject=self._reject)
         n_new = len(active) - before
         if n_new:
             new_avg = sample_average_gains(self.config.channel, n_new, self.rng)
@@ -222,7 +261,14 @@ class MultiSpinCell:
             self.rates = spectrum_efficiency(self.config.channel, self.gains)
             if self.estimator is not None:
                 self.estimator.extend(n_new)
+            self._emit("on_admit", active[before:])
         return active
+
+    def _reject(self, req: Request):
+        """Evict a permanently-unservable request (loudly: recorded AND
+        surfaced to listeners, so the gateway can answer the client)."""
+        self.rejected.append(req)
+        self._emit("on_reject", req)
 
     def leave(self, rid: int) -> Request:
         """Permanent device failure / disconnect: drop the request and its
@@ -361,17 +407,36 @@ class MultiSpinCell:
             return self._step_pipelined(active_reqs, key)
         return self._step_sync(active_reqs, key)
 
+    def _latency_components(self, plan, lengths: np.ndarray,
+                            t_slm: np.ndarray, rates: np.ndarray):
+        """``(draft, upload)`` per-device latency split: L_k T_k^S on-device
+        drafting and L_k Q/(B_k r_k) uplink.  Server-drafting schemes
+        (Cen-SPIN) provide their own per-device model and have no uplink to
+        straggle on — their whole latency counts as the draft phase.
+        Telemetry wants the phases separately (DiP-SD-style round
+        breakdowns); the round loop sums them."""
+        if plan.per_device_latency is not None:
+            draft = np.asarray(plan.per_device_latency, dtype=np.float64)
+            return draft, np.zeros_like(draft)
+        bandwidth = np.asarray(plan.bandwidth, dtype=np.float64)
+        lengths = np.asarray(lengths, dtype=np.float64)
+        draft = lengths * np.asarray(t_slm, dtype=np.float64)
+        upload = lengths * self.controller.q_tok_bits \
+            / np.maximum(bandwidth * rates, 1e-9)
+        return draft, upload
+
     def _per_device_latency(self, plan, lengths: np.ndarray,
                             t_slm: np.ndarray,
                             rates: np.ndarray) -> np.ndarray:
-        """Draft+upload latency per device.  Server-drafting schemes
-        (Cen-SPIN) provide their own per-device model — there is no uplink
-        to straggle on — otherwise it is L_k (T_k^S + Q/(B_k r_k))."""
-        if plan.per_device_latency is not None:
-            return np.asarray(plan.per_device_latency, dtype=np.float64)
-        bandwidth = np.asarray(plan.bandwidth, dtype=np.float64)
-        return lengths * (t_slm + self.controller.q_tok_bits
-                          / np.maximum(bandwidth * rates, 1e-9))
+        """Total draft+upload latency per device (deadline masking input)."""
+        draft, upload = self._latency_components(plan, lengths, t_slm, rates)
+        return draft + upload
+
+    def _pool_stats(self) -> dict | None:
+        """Backend memory snapshot (paged engines: page-pool occupancy),
+        None when the backend has no ``pool_stats`` hook."""
+        ps = getattr(self.backend, "pool_stats", None)
+        return ps() if callable(ps) else None
 
     def _verify(self, plan, lengths, requests, key, mask) -> np.ndarray:
         """Backend verification call; the multi-draft width J rides along
@@ -392,8 +457,9 @@ class MultiSpinCell:
         bandwidth = np.asarray(plan.bandwidth, dtype=np.float64)
 
         # --- steps 2-3: drafting + upload latency (straggler-limited) ---
-        per_dev_lat = self._per_device_latency(plan, lengths, t_slm,
-                                               self.rates)
+        draft_lat, upload_lat = self._latency_components(plan, lengths, t_slm,
+                                                         self.rates)
+        per_dev_lat = draft_lat + upload_lat
         active = self._deadline_mask(per_dev_lat)
         t_ma = float(np.max(per_dev_lat[active]))
 
@@ -419,10 +485,14 @@ class MultiSpinCell:
             active=active,
             rids=np.array([r.rid for r in active_reqs]),
             draft_width=int(plan.draft_width),
+            t_draft=float(np.max(draft_lat[active])),
+            t_upload=float(np.max(upload_lat[active])),
         )
         self.history.append(rec)
         self._round_idx += 1
         self._retire(active_reqs, accepted, t_round)
+        rec.pool_stats = self._pool_stats()
+        self._emit("on_round", rec)
         return rec
 
     def _step_pipelined(self, active_reqs: list[Request],
@@ -445,8 +515,10 @@ class MultiSpinCell:
         plan = self.controller.plan(alphas_all[h], t_slm_all[h], self.rates[h])
         lengths_h = np.asarray(plan.lengths, dtype=np.int64)
         bandwidth_h = np.asarray(plan.bandwidth, dtype=np.float64)
-        per_dev = self._per_device_latency(plan, lengths_h, t_slm_all[h],
-                                           self.rates[h])
+        draft_h, upload_h = self._latency_components(plan, lengths_h,
+                                                     t_slm_all[h],
+                                                     self.rates[h])
+        per_dev = draft_h + upload_h
         # straggler masking within the half — same policy as the sync
         # schedule (this previously ignored deadline_factor entirely)
         ok_h = self._deadline_mask(per_dev)
@@ -493,11 +565,15 @@ class MultiSpinCell:
             active=mask,
             rids=np.array([r.rid for r in active_reqs]),
             draft_width=int(plan.draft_width),
+            t_draft=float(np.max(draft_h[ok_h])),
+            t_upload=float(np.max(upload_h[ok_h])),
         )
         self.history.append(rec)
         self._round_idx += 1
         self._retire(active_reqs, accepted, step_time,
                      participated=participated)
+        rec.pool_stats = self._pool_stats()
+        self._emit("on_round", rec)
         return rec
 
     # ------------------------------------------------------------------
@@ -526,18 +602,42 @@ class MultiSpinCell:
     # ------------------------------------------------------------------
 
     def summary(self) -> dict:
-        """Protocol-level accounting over all executed rounds (raw accepted
-        tokens; see ``scheduler.stats`` for the per-request capped view).
-        In the pipelined schedule the trailing in-flight verification is
-        drained into the wall-clock."""
+        """Protocol-level accounting over all executed rounds.
+
+        Goodput has TWO legitimate views and this is the one place exposing
+        both (telemetry reports them side by side rather than two subtly
+        different numbers from two code paths):
+
+        * ``goodput_committed`` (alias ``goodput``) — every token the
+          protocol committed (``RoundRecord.accepted``, bonus included,
+          even past a request's ``max_new_tokens`` budget in its final
+          round) over the protocol wall-clock INCLUDING the pipelined
+          trailing-verification drain.  The paper's protocol-efficiency
+          view.
+        * ``goodput_capped`` — ``scheduler.stats``' per-request view: each
+          request stops counting at its ``max_new_tokens`` budget, over the
+          scheduler's billed wall time (idle drains are billed there too,
+          so for a completed session the denominators agree and any gap is
+          purely the final-round overshoot in the numerator).  The
+          user-visible serving throughput.
+
+        ``seconds_draft``/``seconds_upload``/``seconds_verify`` sum the
+        per-phase maxima across rounds (phases overlap across devices, so
+        draft+upload >= the multi-access wall share)."""
         total_tokens = float(sum(np.sum(r.accepted) for r in self.history))
         total_time = float(sum(r.t_round for r in self.history))
         total_time += self._pending_ver + self._drained_ver
+        goodput = total_tokens / total_time if total_time else 0.0
         out = {
             "rounds": len(self.history),
             "tokens": total_tokens,
             "seconds": total_time,
-            "goodput": total_tokens / total_time if total_time else 0.0,
+            "goodput": goodput,
+            "goodput_committed": goodput,
+            "goodput_capped": self.scheduler.stats.goodput,
+            "seconds_draft": float(sum(r.t_draft for r in self.history)),
+            "seconds_upload": float(sum(r.t_upload for r in self.history)),
+            "seconds_verify": float(sum(r.t_ver for r in self.history)),
         }
         if self.history:
             out["mean_predicted_goodput"] = float(np.mean(

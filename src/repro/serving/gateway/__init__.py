@@ -1,0 +1,44 @@
+"""Live serving gateway + telemetry for Multi-SPIN cells (stdlib-only).
+
+``MultiSpinGateway`` serves a live ``MultiSpinCell`` over HTTP/1.1 with
+SSE token streaming; ``MetricsHub`` turns round records into Prometheus
+metrics and JSON stats; ``GatewayClient`` / ``run_loadgen`` drive it.
+Everything in this package is importable without JAX.
+"""
+
+from repro.serving.gateway.client import (
+    GatewayClient,
+    GatewayError,
+    GenerateResult,
+    SSEEvent,
+)
+from repro.serving.gateway.loadgen import (
+    LoadGenConfig,
+    RequestRecord,
+    percentile,
+    run_loadgen,
+    summarize,
+)
+from repro.serving.gateway.server import (
+    GatewayConfig,
+    MultiSpinGateway,
+    serve,
+)
+from repro.serving.gateway.telemetry import MetricsHub, RoundMetrics
+
+__all__ = [
+    "GatewayClient",
+    "GatewayError",
+    "GenerateResult",
+    "SSEEvent",
+    "LoadGenConfig",
+    "RequestRecord",
+    "percentile",
+    "run_loadgen",
+    "summarize",
+    "GatewayConfig",
+    "MultiSpinGateway",
+    "serve",
+    "MetricsHub",
+    "RoundMetrics",
+]

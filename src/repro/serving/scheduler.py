@@ -30,6 +30,7 @@ class Request:
     rounds: int = 0
     done: bool = False
     submit_time: float = 0.0
+    first_token_time: float = 0.0  # clock at first committed token (TTFT)
     finish_time: float = 0.0
 
 
@@ -39,6 +40,10 @@ class SchedulerStats:
     total_tokens: int = 0
     total_rounds: int = 0
     wall_time: float = 0.0
+    # per-request time-to-first-token in SIMULATED seconds (queue wait +
+    # the rounds until the first commit), appended as each request first
+    # produces; telemetry reports percentiles over this
+    ttft_s: list = dataclasses.field(default_factory=list)
 
     @property
     def goodput(self) -> float:
@@ -108,6 +113,9 @@ class RoundScheduler:
         still = []
         for i, (req, n) in enumerate(zip(self.active, accepted)):
             produced = int(min(n, req.max_new_tokens - req.generated))
+            if produced > 0 and req.generated == 0:
+                req.first_token_time = self.clock
+                self.stats.ttft_s.append(self.clock - req.submit_time)
             req.generated += produced
             if participated is None or participated[i]:
                 req.rounds += 1

@@ -367,3 +367,78 @@ def test_pipelined_schedule_honors_deadline_factor():
                 assert rec.t_ma < 0.01 * 100 * rec.lengths[i3]
     assert participated > 0
     assert dropped == participated                # always over deadline
+
+
+# ---------------------------------------------------------------------------
+# Telemetry satellites: phase breakdown, the two goodput views, listeners
+# ---------------------------------------------------------------------------
+
+def test_round_record_phase_breakdown():
+    """Every round carries t_draft/t_upload with the documented geometry:
+    phases overlap across devices, so t_draft + t_upload >= t_ma, and the
+    full round is the multi-access phase plus verification."""
+    cell = _cell(K=4)
+    cell.run(n_rounds=5)
+    for rec in cell.history:
+        assert rec.t_draft > 0 and rec.t_upload > 0
+        assert rec.t_draft + rec.t_upload >= rec.t_ma - 1e-12
+        assert max(rec.t_draft, rec.t_upload) <= rec.t_ma + 1e-12
+        assert rec.t_round == pytest.approx(rec.t_ma + rec.t_ver)
+        assert rec.pool_stats is None          # synthetic: no page pool
+    s = cell.summary()
+    assert s["seconds_draft"] == pytest.approx(
+        sum(r.t_draft for r in cell.history))
+    assert s["seconds_upload"] == pytest.approx(
+        sum(r.t_upload for r in cell.history))
+    assert s["seconds_verify"] == pytest.approx(
+        sum(r.t_ver for r in cell.history))
+
+
+def test_summary_exposes_both_goodput_views():
+    """`goodput_committed` counts RAW accepted tokens (a finishing device's
+    final round can overshoot its budget) over the protocol wall;
+    `goodput_capped` is the scheduler's budget-capped account.  Committed
+    always dominates."""
+    cell = _cell(K=4)
+    for r in list(cell.scheduler.queue):
+        r.max_new_tokens = 10                   # force final-round overshoot
+    cell.drain()
+    s = cell.summary()
+    assert s["goodput_committed"] == pytest.approx(s["goodput"])
+    assert s["goodput_capped"] == pytest.approx(cell.scheduler.stats.goodput)
+    assert s["goodput_committed"] >= s["goodput_capped"] > 0
+    raw = sum(int(r.accepted.sum()) for r in cell.history)
+    assert raw >= cell.scheduler.stats.total_tokens
+    assert cell.scheduler.stats.total_tokens == 4 * 10
+
+
+def test_cell_listener_surface():
+    """on_admit/on_round/on_reject fire at the documented points; partial
+    listeners (missing methods) are fine; remove_listener detaches."""
+    events = []
+
+    class Probe:
+        def on_admit(self, reqs):
+            events.append(("admit", [r.rid for r in reqs]))
+
+        def on_round(self, rec):
+            events.append(("round", int(rec.accepted.sum())))
+
+    class RoundOnly:
+        def on_round(self, rec):
+            events.append(("round2", None))
+
+    cell = _cell(K=2)
+    probe = cell.add_listener(Probe())
+    cell.add_listener(RoundOnly())
+    rec = cell.step()
+    assert events[0] == ("admit", [0, 1])
+    assert events[1] == ("round", int(rec.accepted.sum()))
+    assert events[2] == ("round2", None)
+    cell.remove_listener(probe)
+    cell.step()
+    assert events[3] == ("round2", None)       # probe detached
+
+    # scheduler TTFT satellite: first-commit times were recorded
+    assert len(cell.scheduler.stats.ttft_s) == 2
+    assert all(t > 0 for t in cell.scheduler.stats.ttft_s)
