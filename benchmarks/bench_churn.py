@@ -124,7 +124,8 @@ def run_engine(rounds: int, rate: float, p_leave: float, max_batch: int,
 
 def run(fast: bool = True, engine: bool = False, smoke: bool = False,
         rounds: int | None = None, rate: float = 0.8, p_leave: float = 0.02,
-        max_batch: int = 8, seed: int = 0) -> list[dict]:
+        max_batch: int = 8, seed: int = 0,
+        out_path: str | None = None) -> list[dict]:
     rows = []
     mean_tokens = None
     if smoke:
@@ -141,7 +142,6 @@ def run(fast: bool = True, engine: bool = False, smoke: bool = False,
         ttft = out.get("ttft_sim_s")
         rows.append({
             "name": f"churn/{'engine' if engine else 'synthetic'}/{scheme}",
-            "us_per_call": "",
             "derived": (f"goodput={out['goodput']:.1f} "
                         f"acceptance={out['acceptance']:.3f} "
                         + (f"ttft_p50={ttft['p50']:.2f}s "
@@ -155,7 +155,7 @@ def run(fast: bool = True, engine: bool = False, smoke: bool = False,
             raise SystemExit(f"churn smoke FAILED: {out}")
     if smoke:
         from .common import write_rows_json
-        write_rows_json(BENCH_PATH, rows)
+        write_rows_json(out_path or BENCH_PATH, rows)
     return rows
 
 
@@ -176,10 +176,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
                     help="dump rows as JSON (CI artifact)")
+    ap.add_argument("--out", type=str, default=None, metavar="PATH",
+                    help="where --smoke writes its rows (default: the "
+                         "committed repo-root BENCH_churn.json; CI points "
+                         "this at artifacts/ so baselines stay untouched)")
     args = ap.parse_args()
     rows = run(fast=not args.full, engine=args.engine, smoke=args.smoke,
                rounds=args.rounds, rate=args.rate, p_leave=args.p_leave,
-               max_batch=args.max_batch, seed=args.seed)
+               max_batch=args.max_batch, seed=args.seed, out_path=args.out)
     for r in rows:
         print(r["name"], r["derived"])
     if args.json:

@@ -110,8 +110,8 @@ async def _stats(port: int) -> dict:
 
 def run(fast: bool = True, backend: str = "synthetic", smoke: bool = False,
         n_requests: int | None = None, rate: float = 16.0,
-        max_batch: int = 8, scheme: str = "hete", seed: int = 0
-        ) -> list[dict]:
+        max_batch: int = 8, scheme: str = "hete", seed: int = 0,
+        out_path: str | None = None) -> list[dict]:
     if smoke:
         backend_, n, max_new = backend, 12, (4, 8)
         rate = 32.0
@@ -127,7 +127,6 @@ def run(fast: bool = True, backend: str = "synthetic", smoke: bool = False,
     ok = report["n_error"] == 0 and report["tokens"] > 0
     row = {
         "name": f"gateway/{backend_}/{scheme}",
-        "us_per_call": "",
         "derived": (f"tokens_per_s={report['tokens_per_s']:.1f} "
                     f"ttft_p50={report['ttft_s']['p50'] * 1e3:.1f}ms "
                     f"ttft_p95={report['ttft_s']['p95'] * 1e3:.1f}ms "
@@ -151,7 +150,7 @@ def run(fast: bool = True, backend: str = "synthetic", smoke: bool = False,
             raise SystemExit(f"gateway smoke FAILED: {row['derived']} "
                              f"errors={report['errors']}")
         from .common import write_rows_json
-        write_rows_json(BENCH_PATH, [row])
+        write_rows_json(out_path or BENCH_PATH, [row])
     return [row]
 
 
@@ -171,10 +170,15 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
                     help="dump rows as JSON (CI artifact)")
+    ap.add_argument("--out", type=str, default=None, metavar="PATH",
+                    help="where --smoke writes its rows (default: the "
+                         "committed repo-root BENCH_gateway.json; CI points "
+                         "this at artifacts/ so baselines stay untouched)")
     args = ap.parse_args()
     rows = run(fast=not args.full, backend=args.backend, smoke=args.smoke,
                n_requests=args.n_requests, rate=args.rate,
-               max_batch=args.max_batch, scheme=args.scheme, seed=args.seed)
+               max_batch=args.max_batch, scheme=args.scheme, seed=args.seed,
+               out_path=args.out)
     for r in rows:
         print(r["name"], r["derived"])
     if args.json:

@@ -1,0 +1,200 @@
+"""Per-kernel microbenchmarks: every Pallas op vs its jnp oracle.
+
+For each kernel in ``repro.kernels.ops`` this times the jit'd public op
+(which dispatches Pallas / interpreter / oracle per ``REPRO_KERNELS``) and
+the jit'd ``ref.py`` oracle on identical inputs, with JAX-correct timing:
+the first call is measured separately (compile + run), the steady-state
+loop only calls ``block_until_ready`` once at the end so async dispatch
+pipelines, and us/call comes from the loop.  Each row also estimates moved
+bytes (inputs + outputs) and reports GB/s — dispatch-level numbers on CPU,
+kernel-level on a real accelerator.
+
+``--smoke`` uses tiny interpret-safe shapes and writes the tracked
+``BENCH_kernels.json`` baseline at the repo root (``--out`` redirects it,
+which is how CI writes fresh rows into ``artifacts/`` without clobbering
+the committed baseline that ``benchmarks/regression.py`` diffs against).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels              # fast
+    PYTHONPATH=src python -m benchmarks.bench_kernels --smoke      # CI rows
+    REPRO_KERNELS=interpret PYTHONPATH=src \
+        python -m benchmarks.bench_kernels --smoke                 # Pallas path
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_kernels.json")
+
+
+def _tree_bytes(tree) -> int:
+    import jax
+    return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(tree)
+               if hasattr(leaf, "nbytes"))
+
+
+def _time(fn, args, iters: int):
+    """(first_call_s, steady_s_per_call, out) with async-dispatch-correct
+    boundaries: one sync after the first call, one after the whole loop."""
+    import jax
+
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(*args))
+    first_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return first_s, (time.perf_counter() - t0) / iters, out
+
+
+def _cases(smoke: bool):
+    """[(name, op_fn, oracle_fn, args)] — op and oracle share signatures."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+
+    if smoke:
+        B, S, H, KV, D = 2, 64, 4, 2, 16
+        T, N, V = 4, 32, 512
+        b, s, h, p, g, n, chunk = 1, 64, 4, 16, 1, 16, 32
+    else:
+        B, S, H, KV, D = 4, 512, 8, 4, 64
+        T, N, V = 8, 256, 32000
+        b, s, h, p, g, n, chunk = 2, 512, 8, 64, 2, 64, 64
+    ps = 16
+    n_slots = S // ps
+    keys = iter(jax.random.split(jax.random.PRNGKey(0), 32))
+
+    def rnd(*shape):
+        return jax.random.normal(next(keys), shape, jnp.float32)
+
+    q_pre = rnd(B, S, H, D)
+    k_pre, v_pre = rnd(B, S, KV, D), rnd(B, S, KV, D)
+    q_dec = rnd(B, H, D)
+    lengths = jnp.full((B,), S // 2, jnp.int32)
+    kq, ks, vq, vs = ref.quantize_kv(k_pre, v_pre)
+    # paged view: row i of the pool pair holds page i of stream i // n_slots
+    P = B * n_slots
+    k_pool = k_pre.reshape(P, ps, KV, D)
+    v_pool = v_pre.reshape(P, ps, KV, D)
+    page_table = jnp.arange(P, dtype=jnp.int32).reshape(B, n_slots)
+    q_win = rnd(B, T, H, D)
+    win_lengths = jnp.full((B,), S // 2 - T, jnp.int32)
+    win_mask = jnp.broadcast_to(jnp.tril(jnp.ones((T, T), bool)), (B, T, T))
+    logits = rnd(N, V)
+    token_ids = jax.random.randint(next(keys), (N,), 0, V)
+    p_rows = jax.nn.softmax(rnd(N, V), axis=-1)
+    q_rows = jax.nn.softmax(rnd(N, V), axis=-1)
+    u = jax.random.uniform(next(keys), (N,))
+    x_ssd = rnd(b, s, h, p)
+    dt = jax.nn.softplus(rnd(b, s, h))
+    A = -jnp.exp(rnd(h))
+    B_ssd, C_ssd = rnd(b, s, g, n), rnd(b, s, g, n)
+
+    return [
+        ("flash_attention", ops.flash_attention, ref.flash_attention_ref,
+         (q_pre, k_pre, v_pre)),
+        ("decode_attention", ops.decode_attention, ref.decode_attention_ref,
+         (q_dec, k_pre, v_pre, lengths)),
+        ("decode_attention_q8", ops.decode_attention_q8,
+         ref.decode_attention_quantized_ref,
+         (q_dec, kq, vq, ks, vs, lengths)),
+        ("paged_attention", ops.paged_attention, ref.paged_attention_ref,
+         (q_win, k_pool, v_pool, page_table, win_lengths)),
+        ("tree_attention", ops.tree_attention, ref.tree_attention_ref,
+         (q_win, k_pre, v_pre, win_lengths, win_mask)),
+        ("paged_tree_attention", ops.paged_tree_attention,
+         ref.paged_tree_attention_ref,
+         (q_win, k_pool, v_pool, page_table, win_lengths, win_mask)),
+        ("gather_softmax_prob", ops.gather_softmax_prob,
+         ref.gather_softmax_prob_ref, (logits, token_ids)),
+        ("residual_sample", ops.residual_sample, ref.residual_sample_ref,
+         (p_rows, q_rows, u)),
+        ("ssd_scan",
+         lambda x_, dt_, A_, B_, C_: ops.ssd_scan(x_, dt_, A_, B_, C_,
+                                                  chunk=chunk),
+         lambda x_, dt_, A_, B_, C_: ref.ssd_scan_ref(x_, dt_, A_, B_, C_,
+                                                      chunk=chunk),
+         (x_ssd, dt, A, B_ssd, C_ssd)),
+    ]
+
+
+def run(fast: bool = True, smoke: bool = False, mode: str | None = None,
+        iters: int | None = None, out_path: str | None = None) -> list[dict]:
+    if mode is not None:
+        os.environ["REPRO_KERNELS"] = mode
+    import jax
+
+    from repro.kernels.ops import kernel_mode
+
+    backend = kernel_mode()
+    if iters is None:
+        iters = 10 if (smoke or fast) else 50
+        if backend == "interpret":
+            iters = min(iters, 3)   # the Pallas interpreter is slow
+    rows = []
+    for name, op_fn, ref_fn, args in _cases(smoke or fast):
+        jop = jax.jit(op_fn)
+        jref = jax.jit(ref_fn)
+        first_s, steady_s, out = _time(jop, args, iters)
+        ref_first_s, ref_steady_s, _ = _time(jref, args, iters)
+        moved = _tree_bytes(args) + _tree_bytes(out)
+        gbps = moved / steady_s / 1e9 if steady_s > 0 else 0.0
+        rows.append({
+            "name": f"kernels/{name}",
+            "backend": backend,
+            "us_per_call": steady_s * 1e6,
+            "compile_ms": max(first_s - steady_s, 0.0) * 1e3,
+            "ref_us_per_call": ref_steady_s * 1e6,
+            "ref_compile_ms": max(ref_first_s - ref_steady_s, 0.0) * 1e3,
+            "gbps": gbps,
+            "bytes_moved": int(moved),
+            "iters": iters,
+            "lead_shape": list(args[0].shape),
+            "derived": (f"us={steady_s * 1e6:.1f} "
+                        f"ref_us={ref_steady_s * 1e6:.1f} "
+                        f"compile_ms={max(first_s - steady_s, 0.0) * 1e3:.1f} "
+                        f"gbps={gbps:.2f} backend={backend}"),
+        })
+    if smoke:
+        from .common import write_rows_json
+        write_rows_json(out_path or BENCH_PATH, rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--mode", default=None,
+                    choices=("auto", "pallas", "ref", "interpret"),
+                    help="force the kernel dispatch path (sets "
+                         "REPRO_KERNELS for this process)")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny interpret-safe shapes; writes the tracked "
+                         "BENCH_kernels.json rows")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", type=str, default=None, metavar="PATH",
+                    help="where --smoke writes its rows (default: the "
+                         "committed repo-root BENCH_kernels.json; CI points "
+                         "this at artifacts/ so baselines stay untouched)")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="dump rows as JSON (CI artifact)")
+    args = ap.parse_args()
+    rows = run(fast=not args.full, smoke=args.smoke, mode=args.mode,
+               iters=args.iters, out_path=args.out)
+    for r in rows:
+        print(r["name"], r["derived"])
+    if args.json:
+        from .common import write_rows_json
+        write_rows_json(args.json, rows)
+
+
+if __name__ == "__main__":
+    main()

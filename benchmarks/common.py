@@ -10,8 +10,11 @@ Trends and gains are structural — constants only set the scale.
 from __future__ import annotations
 
 import dataclasses
+import datetime
 import json
 import os
+import platform
+import subprocess
 
 import numpy as np
 
@@ -193,12 +196,54 @@ def _jsonable(obj):
     return obj
 
 
+def _git_sha() -> str | None:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        return out.stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
 def write_rows_json(path: str, rows: list[dict]) -> None:
-    """Dump benchmark rows as JSON (CI uploads these as workflow artifacts
-    so the goodput trajectory is inspectable per PR)."""
+    """Dump benchmark rows as JSON (CI uploads these as workflow artifacts;
+    ``benchmarks/regression.py`` diffs them against committed baselines).
+
+    Schema v2: a uniform envelope — ``schema_version`` / ``generated_utc`` /
+    ``git_sha`` / ``host`` / ``rows`` — stamped on every BENCH file so the
+    regression gate can tell which rows are comparable (timing metrics only
+    gate against same-host baselines).  Empty-string and ``None`` fields are
+    dropped from rows: the old ``"us_per_call": ""`` placeholders carried no
+    information and broke uniformity between timing and structural benches.
+    """
+    rows = [{k: v for k, v in _jsonable(r).items() if v not in ("", None)}
+            for r in rows]
+    doc = {
+        "schema_version": 2,
+        "generated_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "git_sha": _git_sha(),
+        "host": platform.node(),
+        "rows": rows,
+    }
+    doc = {k: v for k, v in doc.items() if v not in ("", None)}
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)
     with open(path, "w") as f:
-        json.dump(_jsonable(rows), f, indent=2, sort_keys=True)
+        json.dump(doc, f, indent=2, sort_keys=True)
     print(f"wrote {path}")
+
+
+def read_rows_json(path: str) -> tuple[dict, list[dict]]:
+    """(envelope, rows) for a BENCH file of either schema: v2 envelopes
+    come back verbatim; legacy v1 bare-list files get a synthetic
+    ``{"schema_version": 1}`` envelope (no host/sha — the regression gate
+    treats their timing rows as cross-host)."""
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, list):
+        return {"schema_version": 1}, doc
+    return doc, list(doc.get("rows", []))

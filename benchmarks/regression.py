@@ -1,0 +1,179 @@
+"""Perf-trajectory regression gate over the committed BENCH baselines.
+
+Compares freshly generated BENCH rows (``bench_kernels --smoke --out``,
+``bench_churn --smoke --out``, ``bench_gateway --smoke --out``) against the
+committed repo-root baselines, metric by metric, with direction-aware
+tolerance bands:
+
+  * **quality / structural** metrics (goodput, acceptance, completed,
+    n_error, ...) are deterministic at fixed seed or hard invariants —
+    they gate ALWAYS;
+  * **timing** metrics (us_per_call, GB/s, tokens/s, real-wall TTFT, ...)
+    are host-dependent — they gate only when the fresh and baseline
+    envelopes report the SAME host (``--strict-timing`` forces gating,
+    cross-host they are reported informationally).
+
+Exit status is the number of failed comparisons (0 = pass), so CI can run::
+
+    python -m benchmarks.bench_kernels --smoke --out artifacts/BENCH_kernels.json
+    python -m benchmarks.bench_churn   --smoke --out artifacts/BENCH_churn.json
+    python -m benchmarks.bench_gateway --smoke --out artifacts/BENCH_gateway.json
+    python -m benchmarks.regression --fresh artifacts
+
+With no ``--fresh`` the baselines are compared against themselves — a
+schema/selftest pass that fails only if a BENCH file is missing or
+malformed.  To accept an intentional perf change, regenerate the baseline
+with the bench's ``--smoke`` (no ``--out``) and commit the diff.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from .common import read_rows_json
+
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_FILES = ("BENCH_kernels.json", "BENCH_churn.json", "BENCH_gateway.json")
+
+# metric -> (better, rel_tol, kind); ``better`` is the GOOD direction, a
+# relative move beyond rel_tol in the other direction is a regression.
+# kind "timing" gates same-host only; "quality"/"structural" always gate.
+METRICS = {
+    "us_per_call": ("lower", 0.60, "timing"),
+    "ref_us_per_call": ("lower", 0.60, "timing"),
+    "compile_ms": ("lower", 1.50, "timing"),
+    "ref_compile_ms": ("lower", 1.50, "timing"),
+    "gbps": ("higher", 0.40, "timing"),
+    "tokens_per_s": ("higher", 0.40, "timing"),
+    "wall_s": ("lower", 0.60, "timing"),
+    "ttft_s.p50": ("lower", 0.60, "timing"),
+    "ttft_s.p95": ("lower", 0.60, "timing"),
+    "latency_s.p50": ("lower", 0.60, "timing"),
+    "latency_s.p95": ("lower", 0.60, "timing"),
+    "goodput_sim_committed": ("higher", 0.40, "timing"),
+    "goodput_sim_capped": ("higher", 0.40, "timing"),
+    "goodput": ("higher", 0.15, "quality"),
+    "acceptance": ("higher", 0.20, "quality"),
+    "tokens": ("higher", 0.25, "quality"),
+    "ttft_sim_s.p50": ("lower", 0.25, "quality"),
+    "ttft_sim_s.p95": ("lower", 0.25, "quality"),
+    "completed": ("higher", 0.0, "structural"),
+    "n_error": ("lower", 0.0, "structural"),
+}
+
+
+def _flatten(row: dict, prefix: str = "") -> dict:
+    out = {}
+    for k, v in row.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, prefix=f"{key}."))
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[key] = float(v)
+    return out
+
+
+def _compare_rows(fname: str, base_row: dict, fresh_row: dict,
+                  gate_timing: bool, report: list) -> int:
+    """Append comparison lines to ``report``; return failure count."""
+    failures = 0
+    base = _flatten(base_row)
+    fresh = _flatten(fresh_row)
+    name = base_row.get("name", "?")
+    for metric, (better, tol, kind) in METRICS.items():
+        if metric not in base:
+            continue
+        if metric not in fresh:
+            report.append(("FAIL", fname, name, metric,
+                           f"metric vanished (baseline {base[metric]:g})"))
+            failures += 1
+            continue
+        b, f = base[metric], fresh[metric]
+        if b == 0.0:
+            # no relative band at a zero baseline: any move in the bad
+            # direction is a regression (covers n_error 0 -> k)
+            bad = f > 0 if better == "lower" else f < 0
+            delta = f
+        else:
+            rel = (f - b) / abs(b)
+            bad = rel > tol if better == "lower" else rel < -tol
+            delta = rel
+        gated = kind != "timing" or gate_timing
+        status = ("FAIL" if bad and gated
+                  else "WARN" if bad else "ok")
+        if status != "ok" or abs(delta) > tol / 2:
+            report.append((status, fname, name, metric,
+                           f"{b:g} -> {f:g} ({delta:+.1%} vs "
+                           f"{'+' if better == 'lower' else '-'}{tol:.0%} "
+                           f"band{'' if gated else ', cross-host info'})"))
+        if status == "FAIL":
+            failures += 1
+    return failures
+
+
+def compare_file(fname: str, baseline_dir: str, fresh_dir: str,
+                 strict_timing: bool, report: list) -> int:
+    base_path = os.path.join(baseline_dir, fname)
+    fresh_path = os.path.join(fresh_dir, fname)
+    if not os.path.exists(base_path):
+        report.append(("skip", fname, "-", "-", "no committed baseline"))
+        return 0
+    if not os.path.exists(fresh_path):
+        report.append(("FAIL", fname, "-", "-",
+                       f"fresh rows missing at {fresh_path}"))
+        return 1
+    base_env, base_rows = read_rows_json(base_path)
+    fresh_env, fresh_rows = read_rows_json(fresh_path)
+    same_host = (base_env.get("host") is not None
+                 and base_env.get("host") == fresh_env.get("host"))
+    gate_timing = strict_timing or same_host
+    fresh_by_name = {r.get("name"): r for r in fresh_rows}
+    failures = 0
+    for base_row in base_rows:
+        name = base_row.get("name")
+        if name not in fresh_by_name:
+            report.append(("FAIL", fname, name, "-",
+                           "row missing from fresh run"))
+            failures += 1
+            continue
+        failures += _compare_rows(fname, base_row, fresh_by_name[name],
+                                  gate_timing, report)
+    return failures
+
+
+def run(baseline_dir: str = REPO_ROOT, fresh_dir: str | None = None,
+        strict_timing: bool = False, files=BENCH_FILES) -> int:
+    """Total failure count across all BENCH files (0 = gate passes)."""
+    fresh_dir = fresh_dir or baseline_dir
+    report: list = []
+    failures = 0
+    for fname in files:
+        failures += compare_file(fname, baseline_dir, fresh_dir,
+                                 strict_timing, report)
+    width = max((len(r[2]) for r in report), default=0)
+    for status, fname, name, metric, detail in report:
+        print(f"[{status:>4}] {fname}: {name:<{width}} {metric}: {detail}")
+    checked = sum(1 for r in report if r[0] != "skip")
+    print(f"regression gate: {failures} failure(s) "
+          f"({checked} notable comparisons reported)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default=REPO_ROOT, metavar="DIR",
+                    help="directory of committed BENCH baselines "
+                         "(default: repo root)")
+    ap.add_argument("--fresh", default=None, metavar="DIR",
+                    help="directory of freshly generated BENCH files "
+                         "(default: the baseline dir — a schema selftest)")
+    ap.add_argument("--strict-timing", action="store_true",
+                    help="gate timing metrics even across hosts")
+    args = ap.parse_args()
+    sys.exit(min(run(args.baseline, args.fresh, args.strict_timing), 125))
+
+
+if __name__ == "__main__":
+    main()

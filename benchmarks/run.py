@@ -26,6 +26,7 @@ def main() -> None:
         bench_churn,
         bench_gateway,
         bench_goodput_vs_L,
+        bench_kernels,
         bench_optimal_L,
         bench_protocols,
         bench_scaling_K,
@@ -45,6 +46,7 @@ def main() -> None:
         "scaling_K": lambda: bench_scaling_K.run(fast),
         "churn": lambda: bench_churn.run(fast),
         "gateway": lambda: bench_gateway.run(fast),
+        "kernels": lambda: bench_kernels.run(fast),
         "beyond": lambda: bench_beyond.run(fast),
         "roofline": lambda: roofline.run(fast),
     }

@@ -15,6 +15,8 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace
+
 from . import ref
 
 _MODE_ENV = "REPRO_KERNELS"
@@ -33,6 +35,22 @@ def _use_pallas() -> bool:
 
 def _interpret() -> bool:
     return kernel_mode() == "interpret"
+
+
+def _span(name: str, x):
+    """Dispatch span for one op: name + lead-operand shape/dtype + the
+    backend actually dispatched (pallas | interpret | ref).  The args dict
+    is only built when a tracer is installed, so untraced dispatch pays a
+    single function call (``trace.NULL_SPAN``) and nothing else.  Span
+    durations measure DISPATCH wall time unless the installed tracer has
+    ``device_sync=True`` and the call site attaches its output."""
+    if trace.active() is None:
+        return trace.NULL_SPAN
+    backend = ("interpret" if _interpret()
+               else "pallas" if _use_pallas() else "ref")
+    return trace.span(name, cat="kernel",
+                      args={"shape": list(x.shape), "dtype": str(x.dtype),
+                            "backend": backend})
 
 
 # ---------------------------------------------------------------------------
@@ -57,20 +75,25 @@ def ssd_scan(x, dt, A, B, C, chunk: int = 64, initial_state=None):
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
         C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    if _use_pallas():
-        from .ssd_scan import ssd_scan_pallas
-        y, fs = ssd_scan_pallas(x, dt, A, B, C, chunk=chunk,
-                                initial_state=initial_state,
-                                interpret=_interpret())
-    else:
-        y, fs = ref.ssd_scan_ref(x, dt, A, B, C, chunk=chunk,
-                                 initial_state=initial_state)
+    with _span("ops.ssd_scan", x) as sp:
+        if _use_pallas():
+            from .ssd_scan import ssd_scan_pallas
+            y, fs = ssd_scan_pallas(x, dt, A, B, C, chunk=chunk,
+                                    initial_state=initial_state,
+                                    interpret=_interpret())
+        else:
+            y, fs = ref.ssd_scan_ref(x, dt, A, B, C, chunk=chunk,
+                                     initial_state=initial_state)
+        sp.attach(y)
     return (y[:, :s] if pad else y), fs
 
 
 def ssd_decode(x, dt, A, B, C, state):
     """One-token SSD recurrence (cheap; always the jnp formulation)."""
-    return ref.ssd_decode_ref(x, dt, A, B, C, state)
+    with _span("ops.ssd_decode", x) as sp:
+        out = ref.ssd_decode_ref(x, dt, A, B, C, state)
+        sp.attach(out[0])
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -79,20 +102,28 @@ def ssd_decode(x, dt, A, B, C, state):
 
 def flash_attention(q, k, v, causal: bool = True):
     """Causal GQA attention. q: (B,Sq,H,D), k/v: (B,Skv,KV,D)."""
-    if _use_pallas():
-        from .flash_attention import flash_attention_pallas
-        return flash_attention_pallas(q, k, v, causal=causal,
-                                      interpret=_interpret())
-    return ref.flash_attention_ref(q, k, v, causal=causal)
+    with _span("ops.flash_attention", q) as sp:
+        if _use_pallas():
+            from .flash_attention import flash_attention_pallas
+            out = flash_attention_pallas(q, k, v, causal=causal,
+                                         interpret=_interpret())
+        else:
+            out = ref.flash_attention_ref(q, k, v, causal=causal)
+        sp.attach(out)
+    return out
 
 
 def decode_attention(q, k_cache, v_cache, lengths):
     """Single-step decode attention against a KV cache."""
-    if _use_pallas():
-        from .decode_attention import decode_attention_pallas
-        return decode_attention_pallas(q, k_cache, v_cache, lengths,
-                                       interpret=_interpret())
-    return ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+    with _span("ops.decode_attention", q) as sp:
+        if _use_pallas():
+            from .decode_attention import decode_attention_pallas
+            out = decode_attention_pallas(q, k_cache, v_cache, lengths,
+                                          interpret=_interpret())
+        else:
+            out = ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+        sp.attach(out)
+    return out
 
 
 def paged_attention(q, k_pool, v_pool, page_table, lengths):
@@ -102,11 +133,16 @@ def paged_attention(q, k_pool, v_pool, page_table, lengths):
     (-1 = unmapped); lengths: (B,) valid kv count for query row 0 (row t
     attends [0, lengths + t)).
     """
-    if _use_pallas():
-        from .paged_attention import paged_attention_pallas
-        return paged_attention_pallas(q, k_pool, v_pool, page_table, lengths,
-                                      interpret=_interpret())
-    return ref.paged_attention_ref(q, k_pool, v_pool, page_table, lengths)
+    with _span("ops.paged_attention", q) as sp:
+        if _use_pallas():
+            from .paged_attention import paged_attention_pallas
+            out = paged_attention_pallas(q, k_pool, v_pool, page_table,
+                                         lengths, interpret=_interpret())
+        else:
+            out = ref.paged_attention_ref(q, k_pool, v_pool, page_table,
+                                          lengths)
+        sp.attach(out)
+    return out
 
 
 def tree_attention(q, k_cache, v_cache, lengths, win_mask):
@@ -117,34 +153,48 @@ def tree_attention(q, k_cache, v_cache, lengths, win_mask):
     [lengths, lengths + T); win_mask: (B, T, T) ancestor-or-self matrix.
     A lower-triangular win_mask recovers the sequential causal window.
     """
-    if _use_pallas():
-        from .tree_attention import tree_attention_pallas
-        return tree_attention_pallas(q, k_cache, v_cache, lengths, win_mask,
-                                     interpret=_interpret())
-    return ref.tree_attention_ref(q, k_cache, v_cache, lengths, win_mask)
+    with _span("ops.tree_attention", q) as sp:
+        if _use_pallas():
+            from .tree_attention import tree_attention_pallas
+            out = tree_attention_pallas(q, k_cache, v_cache, lengths,
+                                        win_mask, interpret=_interpret())
+        else:
+            out = ref.tree_attention_ref(q, k_cache, v_cache, lengths,
+                                         win_mask)
+        sp.attach(out)
+    return out
 
 
 def paged_tree_attention(q, k_pool, v_pool, page_table, lengths, win_mask):
     """``tree_attention`` through a paged KV cache (scalar-prefetched page
     table; pools (P, ps, KV, D), page_table (B, n_slots), -1 = unmapped)."""
-    if _use_pallas():
-        from .tree_attention import paged_tree_attention_pallas
-        return paged_tree_attention_pallas(q, k_pool, v_pool, page_table,
-                                           lengths, win_mask,
-                                           interpret=_interpret())
-    return ref.paged_tree_attention_ref(q, k_pool, v_pool, page_table,
-                                        lengths, win_mask)
+    with _span("ops.paged_tree_attention", q) as sp:
+        if _use_pallas():
+            from .tree_attention import paged_tree_attention_pallas
+            out = paged_tree_attention_pallas(q, k_pool, v_pool, page_table,
+                                              lengths, win_mask,
+                                              interpret=_interpret())
+        else:
+            out = ref.paged_tree_attention_ref(q, k_pool, v_pool, page_table,
+                                               lengths, win_mask)
+        sp.attach(out)
+    return out
 
 
 def decode_attention_q8(q, k_cache, v_cache, k_scale, v_scale, lengths):
     """Decode attention over an int8 KV cache (per-head scales)."""
-    if _use_pallas():
-        from .decode_attention import decode_attention_q8_pallas
-        return decode_attention_q8_pallas(q, k_cache, v_cache, k_scale,
-                                          v_scale, lengths,
-                                          interpret=_interpret())
-    return ref.decode_attention_quantized_ref(q, k_cache, v_cache, k_scale,
-                                              v_scale, lengths)
+    with _span("ops.decode_attention_q8", q) as sp:
+        if _use_pallas():
+            from .decode_attention import decode_attention_q8_pallas
+            out = decode_attention_q8_pallas(q, k_cache, v_cache, k_scale,
+                                             v_scale, lengths,
+                                             interpret=_interpret())
+        else:
+            out = ref.decode_attention_quantized_ref(q, k_cache, v_cache,
+                                                     k_scale, v_scale,
+                                                     lengths)
+        sp.attach(out)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -153,16 +203,24 @@ def decode_attention_q8(q, k_cache, v_cache, k_scale, v_scale, lengths):
 
 def gather_softmax_prob(logits, token_ids):
     """p_target(token) for each row without materializing softmax(V)."""
-    if _use_pallas():
-        from .gather_softmax_prob import gather_softmax_prob_pallas
-        return gather_softmax_prob_pallas(logits, token_ids,
-                                          interpret=_interpret())
-    return ref.gather_softmax_prob_ref(logits, token_ids)
+    with _span("ops.gather_softmax_prob", logits) as sp:
+        if _use_pallas():
+            from .gather_softmax_prob import gather_softmax_prob_pallas
+            out = gather_softmax_prob_pallas(logits, token_ids,
+                                             interpret=_interpret())
+        else:
+            out = ref.gather_softmax_prob_ref(logits, token_ids)
+        sp.attach(out)
+    return out
 
 
 def residual_sample(p, q, u):
     """Sample from normalize(max(p-q, 0)) via inverse CDF (paper eq. 5)."""
-    if _use_pallas():
-        from .residual_sample import residual_sample_pallas
-        return residual_sample_pallas(p, q, u, interpret=_interpret())
-    return ref.residual_sample_ref(p, q, u)
+    with _span("ops.residual_sample", p) as sp:
+        if _use_pallas():
+            from .residual_sample import residual_sample_pallas
+            out = residual_sample_pallas(p, q, u, interpret=_interpret())
+        else:
+            out = ref.residual_sample_ref(p, q, u)
+        sp.attach(out)
+    return out

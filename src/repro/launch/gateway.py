@@ -76,12 +76,18 @@ async def _serve(args):
 
     cell = build_cell(args)
     hub = MetricsHub(trace_path=args.trace)
-    gcfg = GatewayConfig(host=args.host, port=args.port)
+    gcfg = GatewayConfig(host=args.host, port=args.port,
+                         trace_spans=args.trace_spans,
+                         trace_device_sync=args.trace_device_sync)
     print(f"multi-spin gateway: scheme={args.scheme} backend={args.backend} "
           f"max_batch={args.max_batch}")
+    print(f"  GET  http://{args.host}:{args.port}/              (dashboard)")
     print(f"  POST http://{args.host}:{args.port}/v1/generate   (SSE)")
     print(f"  GET  http://{args.host}:{args.port}/metrics       (Prometheus)")
     print(f"  GET  http://{args.host}:{args.port}/v1/stats      (JSON)")
+    if args.trace_spans:
+        print(f"  GET  http://{args.host}:{args.port}/v1/trace      "
+              "(Perfetto JSON)")
     await serve(cell, config=gcfg, hub=hub)
 
 
@@ -137,6 +143,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="append per-round RoundMetrics JSONL here")
+    ap.add_argument("--trace-spans", action="store_true",
+                    help="install the span tracer; GET /v1/trace serves "
+                         "Chrome trace-event JSON for Perfetto")
+    ap.add_argument("--trace-device-sync", action="store_true",
+                    help="block_until_ready at span exits so device time "
+                         "lands in the enclosing span (slower rounds)")
     ap.add_argument("--smoke", action="store_true",
                     help="no server: in-process loadgen burst, print report")
     ap.add_argument("--smoke-requests", type=int, default=8)

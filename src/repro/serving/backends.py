@@ -25,6 +25,8 @@ from typing import Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
+from repro.obs import trace
+
 
 @runtime_checkable
 class VerificationBackend(Protocol):
@@ -261,7 +263,12 @@ class EngineBackend:
             freeze[np.asarray(rows)[~np.asarray(mask, dtype=bool)]] = True
         if key is None:
             key = jax.random.PRNGKey(int(rng.integers(2 ** 31)))
-        self.state, res, _ = self.engine.spin_round(
-            self.state, full, key, vhat=self.vhat, freeze=freeze,
-            draft_width=int(draft_width))
+        args = None if trace.active() is None else {
+            "B": B, "K": len(rows), "L_max": int(lengths.max()),
+            "J": int(draft_width)}
+        with trace.span("engine.verify", cat="engine", args=args) as sp:
+            self.state, res, _ = self.engine.spin_round(
+                self.state, full, key, vhat=self.vhat, freeze=freeze,
+                draft_width=int(draft_width))
+            sp.attach(res.output_len)
         return np.asarray(res.output_len, dtype=np.int64)[rows]

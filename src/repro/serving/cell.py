@@ -45,6 +45,7 @@ from repro.core.controller import (
     VerificationLatencyModel,
 )
 from repro.core.schemes import available_schemes, get_scheme
+from repro.obs import trace
 from repro.serving.backends import SyntheticBackend, VerificationBackend
 from repro.serving.scheduler import Request, RoundScheduler
 
@@ -388,7 +389,14 @@ class MultiSpinCell:
 
     def step(self, key=None) -> RoundRecord | None:
         """Run one protocol round (or one pipelined half-round).  Returns
-        ``None`` when the cell is idle (no queued or active requests)."""
+        ``None`` when the cell is idle (no queued or active requests).
+
+        With a tracer installed (``repro.obs.trace``) each round executes
+        under a ``cell.step`` span whose args carry the round index, the
+        participating rids, and the SIMULATED phase breakdown
+        (t_draft/t_upload/t_ver/t_round) — per-request trace correlation
+        keys off the rids, and summing the phase args across spans
+        reproduces ``summary()``'s seconds_draft/upload/verify."""
         active_reqs = self.admit()
         if not active_reqs:
             # idle: the in-flight verification (pipelined) completes while
@@ -403,9 +411,19 @@ class MultiSpinCell:
             self._pending_ver = 0.0
             self._pending_rids = set()
             return None
-        if self.config.schedule == "pipelined":
-            return self._step_pipelined(active_reqs, key)
-        return self._step_sync(active_reqs, key)
+        args = None if trace.active() is None else {
+            "schedule": self.config.schedule, "scheme": self.config.scheme}
+        with trace.span("cell.step", cat="cell", args=args) as sp:
+            if self.config.schedule == "pipelined":
+                rec = self._step_pipelined(active_reqs, key)
+            else:
+                rec = self._step_sync(active_reqs, key)
+            if sp is not trace.NULL_SPAN:
+                sp.set(round=len(self.history) - 1,
+                       rids=[int(r) for r in rec.rids],
+                       t_draft=rec.t_draft, t_upload=rec.t_upload,
+                       t_ver=rec.t_ver, t_round=rec.t_round)
+        return rec
 
     def _latency_components(self, plan, lengths: np.ndarray,
                             t_slm: np.ndarray, rates: np.ndarray):
@@ -451,8 +469,9 @@ class MultiSpinCell:
         # --- step 1: system configuration ---
         self._refade()
         t_slm = np.array([r.T_S for r in active_reqs])
-        plan = self.controller.plan(self.planning_alphas(active_reqs), t_slm,
-                                    self.rates)
+        with trace.span("cell.plan", cat="cell"):
+            plan = self.controller.plan(self.planning_alphas(active_reqs),
+                                        t_slm, self.rates)
         lengths = np.asarray(plan.lengths, dtype=np.int64)
         bandwidth = np.asarray(plan.bandwidth, dtype=np.float64)
 
@@ -467,7 +486,8 @@ class MultiSpinCell:
         K_active = int(active.sum())
         t_ver = (float(plan.t_ver) if plan.t_ver is not None
                  else self.controller.t_ver_model(K_active))
-        accepted = self._verify(plan, lengths, active_reqs, key, active)
+        with trace.span("cell.verify", cat="cell"):
+            accepted = self._verify(plan, lengths, active_reqs, key, active)
         accepted = np.where(active, accepted, 0)
 
         # --- step 5: feedback / estimator update (active devices only:
@@ -512,7 +532,9 @@ class MultiSpinCell:
             h = halves[0]
         self._pipe_parity += 1
 
-        plan = self.controller.plan(alphas_all[h], t_slm_all[h], self.rates[h])
+        with trace.span("cell.plan", cat="cell"):
+            plan = self.controller.plan(alphas_all[h], t_slm_all[h],
+                                        self.rates[h])
         lengths_h = np.asarray(plan.lengths, dtype=np.int64)
         bandwidth_h = np.asarray(plan.bandwidth, dtype=np.float64)
         draft_h, upload_h = self._latency_components(plan, lengths_h,
@@ -539,8 +561,9 @@ class MultiSpinCell:
         self._pending_ver = t_ver
         self._pending_rids = h_rids
 
-        accepted_h = self._verify(plan, lengths_h,
-                                  [active_reqs[j] for j in h], key, ok_h)
+        with trace.span("cell.verify", cat="cell"):
+            accepted_h = self._verify(plan, lengths_h,
+                                      [active_reqs[j] for j in h], key, ok_h)
         accepted_h = np.where(ok_h, accepted_h, 0)
 
         participated = np.zeros(K, dtype=bool)

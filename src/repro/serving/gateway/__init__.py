@@ -12,6 +12,7 @@ from repro.serving.gateway.client import (
     GenerateResult,
     SSEEvent,
 )
+from repro.serving.gateway.dashboard import DASHBOARD_HTML
 from repro.serving.gateway.loadgen import (
     LoadGenConfig,
     RequestRecord,
@@ -27,6 +28,7 @@ from repro.serving.gateway.server import (
 from repro.serving.gateway.telemetry import MetricsHub, RoundMetrics
 
 __all__ = [
+    "DASHBOARD_HTML",
     "GatewayClient",
     "GatewayError",
     "GenerateResult",

@@ -122,6 +122,11 @@ class GatewayClient:
     async def stats(self) -> dict:
         return await self._call("GET", "/v1/stats")
 
+    async def trace(self) -> dict:
+        """Chrome trace-event JSON (``GET /v1/trace``); raises
+        ``GatewayError`` (409) when the gateway runs with tracing off."""
+        return await self._call("GET", "/v1/trace")
+
     async def health(self) -> dict:
         return await self._call("GET", "/healthz")
 

@@ -16,6 +16,11 @@ Endpoints:
     ``error`` event (evicted at admission) — never silent queue eviction.
   * ``GET /metrics``            — Prometheus text (``MetricsHub``).
   * ``GET /v1/stats``           — JSON running aggregates + last round.
+  * ``GET /v1/trace``           — Chrome trace-event JSON of the span
+    tracer's buffer (load in Perfetto / ``chrome://tracing``); structured
+    409 when the gateway runs with tracing off.
+  * ``GET /``                   — minimal KPI dashboard (static HTML
+    polling ``/v1/stats``).
   * ``GET /healthz``            — liveness.
   * ``DELETE /v1/streams/{rid}``— retire a stream mid-session (its pages
     return to the pool on a paged engine); the stream gets a ``retired``
@@ -36,8 +41,11 @@ import asyncio
 import dataclasses
 import json
 import time
+import uuid
 from collections import deque
 
+from repro.obs import trace
+from repro.serving.gateway.dashboard import DASHBOARD_HTML
 from repro.serving.gateway.telemetry import MetricsHub
 from repro.serving.scheduler import Request
 
@@ -55,6 +63,9 @@ class GatewayConfig:
     default_max_new_tokens: int = 32
     default_alpha: float = 0.8
     default_T_S: float = 0.009
+    trace_spans: bool = False      # install a repro.obs tracer for the run
+    trace_capacity: int = 65536    # span ring size (oldest spans drop)
+    trace_device_sync: bool = False  # block_until_ready at span exits
 
 
 class _Stream:
@@ -64,6 +75,9 @@ class _Stream:
         self.req = req
         self.rid = req.rid
         self.tag = tag
+        # correlation id carried on every SSE event; span args record rids,
+        # so a Perfetto search for this stream goes trace_id -> rid -> spans
+        self.trace_id = f"{req.rid:x}-{uuid.uuid4().hex[:12]}"
         self.queue: asyncio.Queue = asyncio.Queue()
         self.streamed = 0            # capped tokens already sent
         self.terminal = False        # a done/error/retired event was queued
@@ -110,12 +124,28 @@ class MultiSpinGateway:
         self._server: asyncio.AbstractServer | None = None
         self._step_task: asyncio.Task | None = None
         self.port = self.config.port
+        # span tracing: the gateway owns the process-global tracer for its
+        # lifetime (installed in start, uninstalled in stop) so cell/engine/
+        # kernel spans fire without any per-call plumbing.  If a tracer is
+        # already installed (a test's ``tracing`` scope), reuse it instead
+        # of stomping the caller's.
+        self.tracer: trace.Tracer | None = None
+        self._owns_tracer = False
 
     # ------------------------------------------------------------------
     # lifecycle
     # ------------------------------------------------------------------
 
     async def start(self):
+        if self.config.trace_spans:
+            existing = trace.active()
+            if existing is not None:
+                self.tracer = existing
+            else:
+                self.tracer = trace.install(trace.Tracer(
+                    capacity=self.config.trace_capacity,
+                    device_sync=self.config.trace_device_sync))
+                self._owns_tracer = True
         self._server = await asyncio.start_server(
             self._handle_connection, self.config.host, self.config.port)
         self.port = self._server.sockets[0].getsockname()[1]
@@ -138,6 +168,9 @@ class MultiSpinGateway:
         for st in list(self._streams.values()):
             st.push("error", {"rid": st.rid, "error": "gateway_shutdown"},
                     terminal=True)
+        if self._owns_tracer:
+            trace.uninstall()
+            self._owns_tracer = False
         self.hub.close()
 
     # ------------------------------------------------------------------
@@ -246,6 +279,7 @@ class MultiSpinGateway:
                 st.streamed += produced
                 st.push("round", {
                     "rid": st.rid,
+                    "trace_id": st.trace_id,
                     "round": len(self.cell.history) - 1,
                     "n": produced,
                     "tokens": tokens,
@@ -257,6 +291,7 @@ class MultiSpinGateway:
             if st.req.done:
                 st.push("done", {
                     "rid": st.rid,
+                    "trace_id": st.trace_id,
                     "generated": st.req.generated,
                     "rounds": st.req.rounds,
                     "ttft_sim_s": float(st.req.first_token_time
@@ -283,6 +318,19 @@ class MultiSpinGateway:
                                     content_type="text/plain; version=0.0.4")
             elif method == "GET" and path == "/v1/stats":
                 await self._respond(writer, 200, self.hub.snapshot())
+            elif method == "GET" and path == "/v1/trace":
+                if self.tracer is None:
+                    await self._respond(writer, 409, {
+                        "error": "tracing_disabled",
+                        "detail": "start the gateway with "
+                                  "GatewayConfig(trace_spans=True) "
+                                  "(launch: --trace-spans)"})
+                else:
+                    await self._respond(
+                        writer, 200, self.tracer.export_chrome_trace())
+            elif method == "GET" and path in ("/", "/dashboard"):
+                await self._respond(writer, 200, DASHBOARD_HTML,
+                                    content_type="text/html; charset=utf-8")
             elif method == "GET" and path == "/healthz":
                 await self._respond(writer, 200, {
                     "ok": True, "active": len(self.cell.scheduler.active),
@@ -323,7 +371,7 @@ class MultiSpinGateway:
     async def _respond(self, writer, status: int, payload,
                        content_type: str = "application/json"):
         reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
-                  422: "Unprocessable Entity",
+                  409: "Conflict", 422: "Unprocessable Entity",
                   500: "Internal Server Error"}.get(status, "OK")
         if isinstance(payload, (dict, list)):
             raw = json.dumps(payload).encode()
@@ -405,6 +453,7 @@ class MultiSpinGateway:
             await writer.drain()
             self._enqueue(("submit", req))
             st.push("queued", {"rid": req.rid, "tag": tag,
+                               "trace_id": st.trace_id,
                                "scheme": self.cell.config.scheme,
                                "schedule": self.cell.config.schedule,
                                "max_new_tokens": req.max_new_tokens})

@@ -71,6 +71,47 @@ class RoundMetrics:
     completed_total: int
 
 
+class _Histogram:
+    """Fixed-bound histogram in Prometheus exposition shape: cumulative
+    ``_bucket{le=...}`` counts plus ``_sum`` / ``_count``.  Bounds are set
+    at construction (Prometheus histograms cannot rebucket); the caller
+    holds the hub lock around ``observe`` and ``exposition``."""
+
+    def __init__(self, bounds):
+        self.bounds = tuple(float(b) for b in bounds)
+        self.counts = [0] * (len(self.bounds) + 1)   # last slot = +Inf
+        self.sum = 0.0
+        self.n = 0
+
+    def observe(self, value: float):
+        v = float(value)
+        self.sum += v
+        self.n += 1
+        for i, b in enumerate(self.bounds):
+            if v <= b:
+                self.counts[i] += 1
+                return
+        self.counts[-1] += 1
+
+    def exposition(self, name: str, help_: str) -> list[str]:
+        lines = [f"# HELP {name} {help_}", f"# TYPE {name} histogram"]
+        cum = 0
+        for b, c in zip(self.bounds, self.counts):
+            cum += c
+            lines.append(f'{name}_bucket{{le="{format(b, "g")}"}} {cum}')
+        cum += self.counts[-1]
+        lines.append(f'{name}_bucket{{le="+Inf"}} {cum}')
+        lines.append(f"{name}_sum {self.sum:.6f}")
+        lines.append(f"{name}_count {self.n}")
+        return lines
+
+
+# simulated seconds; spans TTFTs of a lightly loaded synthetic cell
+# (~0.1 s) through deep-queue engine sessions (tens of seconds)
+_TTFT_BOUNDS = (0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0)
+_ROUND_BOUNDS = (0.025, 0.05, 0.1, 0.2, 0.4, 0.8, 1.6, 3.2)
+
+
 class MetricsHub:
     """Round-granular metrics aggregator + Prometheus exporter + JSONL sink.
 
@@ -99,6 +140,10 @@ class MetricsHub:
         self.admitted_total = 0
         self.rejected_total = 0
         self.sim_seconds_total = 0.0
+        # distribution families (simulated seconds)
+        self.hist_round = _Histogram(_ROUND_BOUNDS)
+        self.hist_ttft = _Histogram(_TTFT_BOUNDS)
+        self._ttft_seen = 0   # scheduler ttft_s entries already observed
 
     # -- lifecycle -------------------------------------------------------
 
@@ -149,6 +194,13 @@ class MetricsHub:
             self.accepted_positions_total += positions
             self.sim_seconds_total += float(rec.t_round)
             stats = cell.scheduler.stats if cell is not None else None
+            self.hist_round.observe(float(rec.t_round))
+            if stats is not None:
+                # the scheduler appends a TTFT when a stream first commits;
+                # observe only the entries new since the last round
+                for v in stats.ttft_s[self._ttft_seen:]:
+                    self.hist_ttft.observe(float(v))
+                self._ttft_seen = len(stats.ttft_s)
             rm = RoundMetrics(
                 round_idx=self.rounds_total - 1,
                 host_time_s=now - self._t0,
@@ -269,6 +321,13 @@ class MetricsHub:
             tokens = self.tokens_committed_total
             admitted = self.admitted_total
             rejected = self.rejected_total
+            hist_lines = (
+                self.hist_ttft.exposition(
+                    "multispin_ttft_seconds",
+                    "simulated time-to-first-token per stream")
+                + self.hist_round.exposition(
+                    "multispin_round_seconds",
+                    "simulated wall seconds per protocol round"))
         metric("multispin_rounds_total", rounds,
                "executed protocol rounds", "counter")
         metric("multispin_tokens_committed_total", tokens,
@@ -292,6 +351,7 @@ class MetricsHub:
         metric("multispin_acceptance_rate",
                f"{self.window_acceptance():.6f}",
                "per-position draft acceptance over the ring window")
+        lines.extend(hist_lines)
         if last is not None:
             metric("multispin_draft_width", last.draft_width,
                    "multi-draft J executed by the last round")
@@ -301,7 +361,7 @@ class MetricsHub:
             metric("multispin_goodput_capped_tokens_per_s",
                    f"{last.goodput_capped:.6f}",
                    "running budget-capped goodput (serving view)")
-            metric("multispin_round_seconds", None,
+            metric("multispin_round_phase_seconds", None,
                    "last round's simulated phase breakdown",
                    labels=[(f'phase="{p}"', f"{v:.6f}") for p, v in (
                        ("draft", last.t_draft), ("upload", last.t_upload),

@@ -39,6 +39,7 @@ from repro.core.drafting import generate_draft_forest, generate_drafts
 from repro.core.token_tree import build_token_tree
 from repro.core.verification import verify_drafts, verify_tree
 from repro.models import build_model
+from repro.obs import trace
 
 from .kv_cache import (
     PagedKVCache,
@@ -51,6 +52,16 @@ from .kv_cache import (
 )
 
 CACHE_KINDS = ("contiguous", "paged")
+
+
+def _span(name: str, args: dict | None = None):
+    """Engine-phase span (``cat="engine"``).  These fire once per round (not
+    per dispatched op), so the few args dicts built per round are noise; the
+    per-op hot path in ``kernels/ops.py`` has the strict zero-allocation
+    guard."""
+    if trace.active() is None:
+        return trace.NULL_SPAN
+    return trace.span(name, cat="engine", args=args)
 
 
 @dataclasses.dataclass
@@ -348,45 +359,54 @@ class SpecEngine:
             # mappings untouched
             cap = self.pages_per_stream * self.page_size
             grown: list[tuple[int, int, int]] = []
-            try:
-                for b in range(B):
-                    if frz_np[b]:
-                        continue
-                    grown.append((b, self.t_pages.length(b),
-                                  self.d_pages.length(b)))
-                    self.t_pages.extend(b, min(int(tpos_np[b]) + L + 1, cap))
-                    self.d_pages.extend(b, min(int(dpos_np[b]) + L + 1, cap))
-            except PagePoolExhausted:
-                for b, t_len, d_len in grown:
-                    self.t_pages.truncate(b, t_len)
-                    self.d_pages.truncate(b, d_len)
-                raise
+            with _span("engine.page_alloc", {"B": B, "L": L}):
+                try:
+                    for b in range(B):
+                        if frz_np[b]:
+                            continue
+                        grown.append((b, self.t_pages.length(b),
+                                      self.d_pages.length(b)))
+                        self.t_pages.extend(b,
+                                            min(int(tpos_np[b]) + L + 1, cap))
+                        self.d_pages.extend(b,
+                                            min(int(dpos_np[b]) + L + 1, cap))
+                except PagePoolExhausted:
+                    for b, t_len, d_len in grown:
+                        self.t_pages.truncate(b, t_len)
+                        self.d_pages.truncate(b, d_len)
+                    raise
             t_cache, d_cache = self._paged_views(B)
         else:
             t_cache, d_cache = self.t_cache, self.d_cache
 
         # --- step 2: distributed drafting (SLM) ---
-        draft_res = generate_drafts(self.draft, self.d_params, d_cache,
-                                    state.pending, state.draft_pos, L,
-                                    k_draft, vhat=vhat)
+        with _span("engine.draft", {"B": B, "L": L}) as sp:
+            draft_res = generate_drafts(self.draft, self.d_params, d_cache,
+                                        state.pending, state.draft_pos, L,
+                                        k_draft, vhat=vhat)
+            sp.attach(draft_res.tokens)
         d_cache = draft_res.cache
 
         # --- step 4: batched verification (LLM) ---
         window = jnp.concatenate([state.pending[:, None], draft_res.tokens],
                                  axis=1)                       # (B, L+1)
-        if needs_state_rollback(self.target_cfg):
-            logits, t_cache, snaps = self.target.forward_window(
-                self.t_params, window, t_cache, state.target_pos,
-                return_snapshots=True)
-        else:
-            logits, t_cache = self.target.forward_window(
-                self.t_params, window, t_cache, state.target_pos)
-            snaps = None
+        with _span("engine.target_pass", {"B": B, "W": L + 1}) as sp:
+            if needs_state_rollback(self.target_cfg):
+                logits, t_cache, snaps = self.target.forward_window(
+                    self.t_params, window, t_cache, state.target_pos,
+                    return_snapshots=True)
+            else:
+                logits, t_cache = self.target.forward_window(
+                    self.t_params, window, t_cache, state.target_pos)
+                snaps = None
+            sp.attach(logits)
 
         draft_len = jnp.asarray(lengths, jnp.int32)
-        res = verify_drafts(k_verify, draft_res.tokens, draft_res.probs,
-                            logits, q_idx=draft_res.q_idx, q_val=draft_res.q_val,
-                            draft_len=draft_len)
+        with _span("engine.verify_tokens", {"B": B, "L": L}) as sp:
+            res = verify_drafts(k_verify, draft_res.tokens, draft_res.probs,
+                                logits, q_idx=draft_res.q_idx,
+                                q_val=draft_res.q_val, draft_len=draft_len)
+            sp.attach(res.accept_counts)
 
         # --- step 5: commit + rollback ---
         # target cache: row b processed [pending, d_1..d_n]; snapshot index n
@@ -425,10 +445,11 @@ class SpecEngine:
         if paged:
             # speculative rejection hands pages straight back to the pool
             ntp, ndp = np.asarray(new_target_pos), np.asarray(new_draft_pos)
-            for b in range(B):
-                if not frz_np[b]:
-                    self.t_pages.truncate(b, int(ntp[b]))
-                    self.d_pages.truncate(b, int(ndp[b]))
+            with _span("engine.page_free", {"B": B}):
+                for b in range(B):
+                    if not frz_np[b]:
+                        self.t_pages.truncate(b, int(ntp[b]))
+                        self.d_pages.truncate(b, int(ndp[b]))
 
         new_state = StreamState(pending=new_pending, target_pos=new_target_pos,
                                 draft_pos=new_draft_pos,
@@ -486,52 +507,63 @@ class SpecEngine:
             # side only ever holds one run (L+1) — repair fits under both
             cap = self.pages_per_stream * self.page_size
             grown: list[tuple[int, int, int]] = []
-            try:
-                for b in range(B):
-                    if frz_np[b]:
-                        continue
-                    grown.append((b, self.t_pages.length(b),
-                                  self.d_pages.length(b)))
-                    self.t_pages.extend(b, min(int(tpos_np[b]) + W + 1, cap))
-                    self.d_pages.extend(b, min(int(dpos_np[b]) + L + 1, cap))
-            except PagePoolExhausted:
-                for b, t_len, d_len in grown:
-                    self.t_pages.truncate(b, t_len)
-                    self.d_pages.truncate(b, d_len)
-                raise
+            with _span("engine.page_alloc", {"B": B, "W": W}):
+                try:
+                    for b in range(B):
+                        if frz_np[b]:
+                            continue
+                        grown.append((b, self.t_pages.length(b),
+                                      self.d_pages.length(b)))
+                        self.t_pages.extend(b,
+                                            min(int(tpos_np[b]) + W + 1, cap))
+                        self.d_pages.extend(b,
+                                            min(int(dpos_np[b]) + L + 1, cap))
+                except PagePoolExhausted:
+                    for b, t_len, d_len in grown:
+                        self.t_pages.truncate(b, t_len)
+                        self.d_pages.truncate(b, d_len)
+                    raise
             t_cache, d_cache = self._paged_views(B)
         else:
             t_cache, d_cache = self.t_cache, self.d_cache
 
         # --- step 2: J drafting runs per stream (SLM) ---
-        forest = generate_draft_forest(self.draft, self.d_params, d_cache,
-                                       state.pending, state.draft_pos, L, J,
-                                       k_draft, vhat=vhat)
+        with _span("engine.draft_forest", {"B": B, "L": L, "J": J}) as sp:
+            forest = generate_draft_forest(self.draft, self.d_params, d_cache,
+                                           state.pending, state.draft_pos,
+                                           L, J, k_draft, vhat=vhat)
+            sp.attach(forest.tokens)
         d_cache = forest.cache
 
         # --- pack into the prefix-deduplicated tree (host-side) ---
-        ttree = build_token_tree(np.asarray(forest.tokens),
-                                 np.asarray(forest.probs),
-                                 np.asarray(forest.q_idx),
-                                 np.asarray(forest.q_val), lengths)
-        window = jnp.asarray(ttree.window_tokens(np.asarray(state.pending)),
-                             jnp.int32)                        # (B, W+1)
-        wmask = jnp.asarray(ttree.window_mask())
-        wdepth = jnp.asarray(ttree.window_depth(), jnp.int32)
+        with _span("engine.tree_build", {"B": B, "L": L, "J": J}):
+            ttree = build_token_tree(np.asarray(forest.tokens),
+                                     np.asarray(forest.probs),
+                                     np.asarray(forest.q_idx),
+                                     np.asarray(forest.q_val), lengths)
+            window = jnp.asarray(
+                ttree.window_tokens(np.asarray(state.pending)),
+                jnp.int32)                                     # (B, W+1)
+            wmask = jnp.asarray(ttree.window_mask())
+            wdepth = jnp.asarray(ttree.window_depth(), jnp.int32)
 
         # --- step 4: ONE ancestor-masked target pass over the whole tree ---
-        logits, t_cache = self.target.forward_window(
-            self.t_params, window, t_cache, state.target_pos,
-            window_mask=wmask, window_depth=wdepth)
+        with _span("engine.target_pass", {"B": B, "W": W + 1, "J": J}) as sp:
+            logits, t_cache = self.target.forward_window(
+                self.t_params, window, t_cache, state.target_pos,
+                window_mask=wmask, window_depth=wdepth)
+            sp.attach(logits)
 
-        res = verify_tree(k_verify, jnp.asarray(ttree.tokens),
-                          jnp.asarray(ttree.parents),
-                          jnp.asarray(ttree.depth),
-                          jnp.asarray(ttree.probs),
-                          jnp.asarray(ttree.paths), logits,
-                          jnp.asarray(ttree.q_idx),
-                          jnp.asarray(ttree.q_val),
-                          jnp.asarray(lengths, jnp.int32))
+        with _span("engine.verify_tokens", {"B": B, "L": L, "J": J}) as sp:
+            res = verify_tree(k_verify, jnp.asarray(ttree.tokens),
+                              jnp.asarray(ttree.parents),
+                              jnp.asarray(ttree.depth),
+                              jnp.asarray(ttree.probs),
+                              jnp.asarray(ttree.paths), logits,
+                              jnp.asarray(ttree.q_idx),
+                              jnp.asarray(ttree.q_val),
+                              jnp.asarray(lengths, jnp.int32))
+            sp.attach(res.accept_counts)
 
         # --- step 5a: cache repair — rewrite the accepted path's K/V over
         # the tree-ordered window slots (a J=1 chain already IS the
@@ -541,10 +573,12 @@ class SpecEngine:
             repair = jnp.concatenate(
                 [state.pending[:, None], res.output_tokens[:, :n_max]],
                 axis=1)                                        # (B, n_max+1)
-            _, t_cache = self.target.forward_window(
-                self.t_params, repair, t_cache, state.target_pos)
-            _, d_cache = self.draft.forward_window(
-                self.d_params, repair, d_cache, state.draft_pos)
+            with _span("engine.cache_repair", {"B": B, "n": n_max + 1}) as sp:
+                _, t_cache = self.target.forward_window(
+                    self.t_params, repair, t_cache, state.target_pos)
+                _, d_cache = self.draft.forward_window(
+                    self.d_params, repair, d_cache, state.draft_pos)
+                sp.attach(t_cache)
         self.t_cache = {k: v for k, v in t_cache.items() if k != "pages"} \
             if paged else t_cache
         self.d_cache = {k: v for k, v in d_cache.items() if k != "pages"} \
@@ -569,10 +603,11 @@ class SpecEngine:
             # every page past the accepted prefix — all dead branches of the
             # tree — returns to the pool here
             ntp, ndp = np.asarray(new_target_pos), np.asarray(new_draft_pos)
-            for b in range(B):
-                if not frz_np[b]:
-                    self.t_pages.truncate(b, int(ntp[b]))
-                    self.d_pages.truncate(b, int(ndp[b]))
+            with _span("engine.page_free", {"B": B}):
+                for b in range(B):
+                    if not frz_np[b]:
+                        self.t_pages.truncate(b, int(ntp[b]))
+                        self.d_pages.truncate(b, int(ndp[b]))
 
         new_state = StreamState(pending=new_pending, target_pos=new_target_pos,
                                 draft_pos=new_draft_pos,

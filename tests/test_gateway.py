@@ -141,9 +141,22 @@ def test_metrics_scrape_parses_and_reports_required_families():
     assert value("multispin_goodput_committed_tokens_per_s") > 0
     assert value("multispin_goodput_capped_tokens_per_s") > 0
     assert value("multispin_pool_free_pages") == 0      # synthetic: no pool
-    assert re.search(r'^multispin_round_seconds\{phase="draft"\} ', text, re.M)
+    assert re.search(r'^multispin_round_phase_seconds\{phase="draft"\} ',
+                     text, re.M)
     assert re.search(r'^multispin_device_goodput_tokens_per_s\{rid="\d+"\} ',
                      text, re.M)
+
+    # histogram families: cumulative le buckets, +Inf == _count, sum sane
+    for fam in ("multispin_ttft_seconds", "multispin_round_seconds"):
+        buckets = [
+            (le, int(c)) for le, c in
+            re.findall(rf'^{fam}_bucket{{le="([^"]+)"}} (\d+)$', text, re.M)]
+        assert buckets and buckets[-1][0] == "+Inf"
+        counts = [c for _, c in buckets]
+        assert counts == sorted(counts), f"{fam} buckets not cumulative"
+        assert counts[-1] == int(value(rf"{fam}_count"))
+        assert value(rf"{fam}_sum") > 0
+    assert value("multispin_ttft_seconds_count") == 4
 
     assert stats["rounds_total"] >= 1
     assert stats["scheduler"]["completed"] == 4
