@@ -75,10 +75,15 @@ def _poisson_churn_cell(cell: MultiSpinCell, rounds: int, rate: float,
         "acceptance": positions / drafted if drafted else 0.0,
         "queued_at_end": len(cell.scheduler.queue),
     }
+    # head-of-line blocking: the longest a SERVABLE request sat at the FIFO
+    # head (batch slots or page pool full) — the queueing tail the
+    # continuous engine's per-stream rounds attack
+    out["hol_block_max_s"] = stats.hol_wait_max
     if stats.ttft_s:
         from repro.serving.gateway.loadgen import percentile
         out["ttft_sim_s"] = {"p50": percentile(stats.ttft_s, 50),
                              "p95": percentile(stats.ttft_s, 95),
+                             "p99": percentile(stats.ttft_s, 99),
                              "n": len(stats.ttft_s)}
     return out
 
@@ -145,8 +150,10 @@ def run(fast: bool = True, engine: bool = False, smoke: bool = False,
             "derived": (f"goodput={out['goodput']:.1f} "
                         f"acceptance={out['acceptance']:.3f} "
                         + (f"ttft_p50={ttft['p50']:.2f}s "
-                           f"ttft_p95={ttft['p95']:.2f}s " if ttft else "")
-                        + f"completed={out['completed']}/{out['submitted']} "
+                           f"ttft_p95={ttft['p95']:.2f}s "
+                           f"ttft_p99={ttft['p99']:.2f}s " if ttft else "")
+                        + f"hol_max={out['hol_block_max_s']:.2f}s "
+                        f"completed={out['completed']}/{out['submitted']} "
                         f"left_early={out['left_early']} "
                         f"queued={out['queued_at_end']} ok={ok}"),
             **out,

@@ -1,0 +1,318 @@
+"""Lockstep vs continuous batching: goodput and TTFT under Poisson churn.
+
+The continuous engine (ROADMAP item 2, DiP-SD/WISP direction) removes the
+cell's round barrier: per-stream state machines, verification batches packed
+from whichever streams are READY, drafting overlapped with in-flight
+verification.  This bench quantifies the trade and guards its correctness
+anchor:
+
+* **sim rows** — the SAME Poisson arrival trace (identical simulated-time
+  schedule, seeds, and device profiles with heterogeneous draft speeds)
+  driven through ``schedule="sync"`` and ``schedule="continuous"`` cells.
+  The smoke gate requires continuous >= lockstep sum goodput AND strictly
+  lower p95 TTFT: slow drafters no longer stall the cohort, at the price of
+  extra fixed verification cost per (smaller) batch.
+* **engine row** — forced-barrier bit-identity: ``max_inflight=1`` +
+  exact shapes must reproduce the lockstep ``SpecEngine.spin_round``
+  committed tokens bit-for-bit at the same seed, and the shape-bucketed
+  assembler must bound distinct dispatch shapes (XLA retraces) under a
+  churny ready-set.
+* **gateway row** — the closed-loop concurrent-client load generator
+  (``LoadGenConfig(mode="closed")``: N persistent SSE clients, per-client
+  think time) against a live continuous-schedule gateway; real-wall
+  timings, host-gated in the regression diff.
+
+``--smoke`` writes ``BENCH_continuous.json`` (the ``continuous-smoke`` CI
+gate; ``bench-regression`` diffs it against the committed baseline).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.bench_continuous           # sim only
+    PYTHONPATH=src python -m benchmarks.bench_continuous --smoke   # CI gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from collections import deque
+
+import numpy as np
+
+from repro.api import CellConfig, MultiSpinCell, Request
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_continuous.json")
+
+ALPHAS = (0.71, 0.74, 0.86, 0.93)
+# heterogeneous device compute: a fast majority and a 7x straggler tail —
+# the regime where lockstep rounds pay max(T_draft) every round
+T_S_CHOICES = (0.004, 0.006, 0.028)
+
+
+def _arrival_trace(n: int, rate_per_s: float, seed: int,
+                   mean_tokens: int) -> list[dict]:
+    """One Poisson arrival schedule in SIMULATED seconds, as request specs
+    (plain dicts: each schedule run builds its own Request objects)."""
+    rng = np.random.default_rng(seed)
+    t, specs = 0.0, []
+    for i in range(n):
+        t += float(rng.exponential(1.0 / rate_per_s))
+        specs.append(dict(
+            t=t, rid=100 + i, prompt_len=8,
+            max_new_tokens=int(rng.integers(mean_tokens // 2,
+                                            2 * mean_tokens)),
+            alpha=float(rng.choice(ALPHAS)),
+            T_S=float(rng.choice(T_S_CHOICES))))
+    return specs
+
+
+def _drive(schedule: str, specs: list[dict], max_batch: int, seed: int,
+           max_inflight: int = 2, max_steps: int = 100_000) -> dict:
+    """Run one cell over the arrival trace until every request retires."""
+    cfg = CellConfig(scheme="hete", max_batch=max_batch, schedule=schedule,
+                     max_inflight=max_inflight, seed=seed)
+    cell = MultiSpinCell(cfg)
+    pending = deque(dict(s) for s in specs)
+    for _ in range(max_steps):
+        while pending and pending[0]["t"] <= cell.scheduler.clock:
+            s = pending.popleft()
+            cell.submit(Request(rid=s["rid"], prompt_len=s["prompt_len"],
+                                max_new_tokens=s["max_new_tokens"],
+                                alpha=s["alpha"], T_S=s["T_S"]))
+        if cell.step() is None:
+            if not pending:
+                break
+            # idle gap before the next arrival: advance the sim clock
+            # without billing busy time
+            cell.scheduler.clock = max(cell.scheduler.clock,
+                                       pending[0]["t"])
+    else:
+        raise SystemExit(f"bench_continuous: {schedule} did not drain")
+    stats = cell.scheduler.stats
+    from repro.serving.gateway.loadgen import percentile
+    occ = [r.batch_occupancy for r in cell.history
+           if r.batch_occupancy is not None]
+    out = {
+        "schedule": schedule,
+        "rounds": len(cell.history),
+        "completed": stats.completed,
+        "tokens": stats.total_tokens,
+        "goodput": stats.goodput,
+        "hol_block_max_s": stats.hol_wait_max,
+        "batch_occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+        "ttft_sim_s": {"p50": percentile(stats.ttft_s, 50),
+                       "p95": percentile(stats.ttft_s, 95),
+                       "p99": percentile(stats.ttft_s, 99),
+                       "n": len(stats.ttft_s)},
+    }
+    if schedule == "continuous":
+        ready = [r.ready_depth for r in cell.history
+                 if r.ready_depth is not None]
+        out["ready_depth_mean"] = float(np.mean(ready)) if ready else 0.0
+    return out
+
+
+def run_sim(n_requests: int, rate_per_s: float, max_batch: int, seed: int,
+            mean_tokens: int, max_inflight: int = 2) -> list[dict]:
+    specs = _arrival_trace(n_requests, rate_per_s, seed, mean_tokens)
+    lock = _drive("sync", specs, max_batch, seed)
+    cont = _drive("continuous", specs, max_batch, seed,
+                  max_inflight=max_inflight)
+    gain = cont["goodput"] / lock["goodput"] if lock["goodput"] else 0.0
+    p95_ratio = (cont["ttft_sim_s"]["p95"] / lock["ttft_sim_s"]["p95"]
+                 if lock["ttft_sim_s"]["p95"] else 0.0)
+    ok = gain >= 1.0 and p95_ratio < 1.0
+    rows = [
+        {"name": "continuous/sim/lockstep",
+         "derived": (f"goodput={lock['goodput']:.1f} "
+                     f"ttft_p95={lock['ttft_sim_s']['p95']:.2f}s "
+                     f"ttft_p99={lock['ttft_sim_s']['p99']:.2f}s "
+                     f"hol_max={lock['hol_block_max_s']:.2f}s "
+                     f"completed={lock['completed']}/{n_requests}"),
+         **lock},
+        {"name": "continuous/sim/continuous",
+         "derived": (f"goodput={cont['goodput']:.1f} "
+                     f"ttft_p95={cont['ttft_sim_s']['p95']:.2f}s "
+                     f"ttft_p99={cont['ttft_sim_s']['p99']:.2f}s "
+                     f"hol_max={cont['hol_block_max_s']:.2f}s "
+                     f"occupancy={cont['batch_occupancy_mean']:.2f} "
+                     f"completed={cont['completed']}/{n_requests}"),
+         **cont},
+        {"name": "continuous/sim/compare",
+         "derived": (f"goodput_gain={gain:.3f}x "
+                     f"ttft_p95_ratio={p95_ratio:.3f} ok={ok}"),
+         "goodput_gain": gain, "ttft_p95_ratio": p95_ratio,
+         "gate_ok": int(ok)},
+    ]
+    return rows
+
+
+def run_engine_identity(seed: int = 42, rounds: int = 5) -> dict:
+    """Forced-barrier bit-identity + assembler retrace bound on a real
+    smoke-scale paged SpecEngine (the tentpole's correctness anchor)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.serving.continuous import BatchAssembler, ContinuousEngine
+    from repro.serving.spec_engine import SpecEngine
+
+    def build():
+        tcfg = get_config("qwen2.5-3b").smoke()
+        dcfg = tcfg.replace(num_layers=1, d_model=32, num_heads=2,
+                            num_kv_heads=1, head_dim=16, d_ff=64,
+                            name="draft-smoke")
+        eng = SpecEngine(tcfg, dcfg, max_len=96, cache_kind="paged",
+                         num_pages=3 * 2 * (96 // 16))
+        eng.init_params(jax.random.PRNGKey(0))
+        return eng, tcfg
+
+    B, M, L = 3, 10, 4
+    base = jax.random.PRNGKey(seed)
+    eng1, tcfg = build()
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, M), 0,
+                                 tcfg.vocab_size)
+    st1 = eng1.start(prompts)
+    for r in range(rounds):
+        st1, _, _ = eng1.spin_round(st1, np.full(B, L),
+                                    jax.random.fold_in(base, r))
+
+    eng2, _ = build()
+    cont = ContinuousEngine(eng2, eng2.start(prompts), base,
+                            max_inflight=1, exact_shapes=True)
+    for b in range(B):
+        cont.add_stream(b, length=L)
+    for _ in range(rounds):
+        cont.step()
+    identical = all(st1.committed[b] == cont.state.committed[b]
+                    for b in range(B))
+
+    # assembler retrace bound: 12 distinct churny (K, L) ready-set shapes
+    # must collapse to at most a handful of pow2 buckets
+    asm = BatchAssembler(max_batch=8)
+    ready_sets = [(k, ln) for k in (1, 2, 3, 5) for ln in (3, 4, 6)]
+    for k, ln in ready_sets:
+        for g in asm.assemble([(object(), ln)] * k):
+            pass
+    return {
+        "name": "continuous/engine/bit_identity",
+        "derived": (f"bit_identical={identical} rounds={rounds} "
+                    f"assembler_shapes={len(asm.shapes)}"
+                    f"/{len(ready_sets)} ready-set shapes"),
+        "bit_identical": int(identical),
+        "rounds": rounds,
+        "assembler_shapes": len(asm.shapes),
+        "ready_set_shapes": len(ready_sets),
+    }
+
+
+async def _run_gateway_closed(n_requests: int, n_clients: int,
+                              seed: int) -> dict:
+    from repro.serving.gateway import (
+        GatewayConfig,
+        LoadGenConfig,
+        MultiSpinGateway,
+        run_loadgen,
+    )
+
+    cfg = CellConfig(scheme="hete", max_batch=8, schedule="continuous",
+                     seed=seed, L_max=8)
+    gw = MultiSpinGateway(MultiSpinCell(cfg),
+                          GatewayConfig(port=0, idle_wait_s=0.02))
+    await gw.start()
+    try:
+        report = await run_loadgen(
+            "127.0.0.1", gw.port,
+            LoadGenConfig(mode="closed", n_clients=n_clients,
+                          think_time_s=0.01, n_requests=n_requests,
+                          max_new_tokens_choices=(4, 8), seed=seed))
+    finally:
+        await gw.stop()
+    return report
+
+
+def run_gateway(n_requests: int, n_clients: int, seed: int) -> dict:
+    import asyncio
+
+    report = asyncio.run(_run_gateway_closed(n_requests, n_clients, seed))
+    ok = report["n_error"] == 0 and report["tokens"] > 0
+    return {
+        "name": "continuous/gateway/closed_loop",
+        "derived": (f"tokens_per_s={report['tokens_per_s']:.1f} "
+                    f"ttft_p95={report['ttft_s']['p95'] * 1e3:.1f}ms "
+                    f"clients={n_clients} ok={ok}"),
+        "tokens_per_s": report["tokens_per_s"],
+        "tokens": report["tokens"],
+        "n_ok": report["n_ok"],
+        "n_error": report["n_error"],
+        "errors": report["errors"],
+        "wall_s": report["wall_s"],
+        "ttft_s": report["ttft_s"],
+        "latency_s": report["latency_s"],
+    }
+
+
+def run(smoke: bool = False, engine: bool | None = None,
+        n_requests: int | None = None, rate: float = 6.0,
+        max_batch: int = 8, seed: int = 0, mean_tokens: int = 16,
+        out_path: str | None = None) -> list[dict]:
+    if smoke:
+        # the sim is synthetic-backend cheap: use the full trace so the p95
+        # gate is judged on a stable sample
+        n = 48
+        engine = True if engine is None else engine
+    else:
+        n = n_requests if n_requests is not None else 48
+        engine = False if engine is None else engine
+    rows = run_sim(n, rate, max_batch, seed, mean_tokens)
+    gate_ok = bool(rows[-1]["gate_ok"])
+    if engine:
+        ident = run_engine_identity()
+        rows.append(ident)
+        gate_ok = gate_ok and bool(ident["bit_identical"])
+        rows.append(run_gateway(n_requests=8, n_clients=3, seed=seed))
+        gate_ok = gate_ok and rows[-1]["n_error"] == 0
+    if smoke:
+        if not gate_ok:
+            raise SystemExit("continuous smoke FAILED: "
+                             + "; ".join(r["derived"] for r in rows))
+        from .common import write_rows_json
+        write_rows_json(out_path or BENCH_PATH, rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n-requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=6.0,
+                    help="Poisson arrivals per SIMULATED second")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mean-tokens", type=int, default=16)
+    ap.add_argument("--engine", action="store_true",
+                    help="also run the engine bit-identity and gateway "
+                         "closed-loop rows (always on under --smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: requires continuous >= lockstep goodput, "
+                         "strictly lower p95 TTFT, and forced-barrier "
+                         "bit-identity; writes BENCH_continuous.json")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="dump rows as JSON (CI artifact)")
+    ap.add_argument("--out", type=str, default=None, metavar="PATH",
+                    help="where --smoke writes its rows (default: the "
+                         "committed repo-root BENCH_continuous.json; CI "
+                         "points this at artifacts/)")
+    args = ap.parse_args()
+    rows = run(smoke=args.smoke, engine=args.engine or None,
+               n_requests=args.n_requests, rate=args.rate,
+               max_batch=args.max_batch, seed=args.seed,
+               mean_tokens=args.mean_tokens, out_path=args.out)
+    for r in rows:
+        print(r["name"], r["derived"])
+    if args.json:
+        from .common import write_rows_json
+        write_rows_json(args.json, rows)
+
+
+if __name__ == "__main__":
+    main()

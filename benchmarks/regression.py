@@ -35,7 +35,8 @@ import sys
 from .common import read_rows_json
 
 REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
-BENCH_FILES = ("BENCH_kernels.json", "BENCH_churn.json", "BENCH_gateway.json")
+BENCH_FILES = ("BENCH_kernels.json", "BENCH_churn.json",
+               "BENCH_gateway.json", "BENCH_continuous.json")
 
 # metric -> (better, rel_tol, kind); ``better`` is the GOOD direction, a
 # relative move beyond rel_tol in the other direction is a regression.
@@ -59,8 +60,20 @@ METRICS = {
     "tokens": ("higher", 0.25, "quality"),
     "ttft_sim_s.p50": ("lower", 0.25, "quality"),
     "ttft_sim_s.p95": ("lower", 0.25, "quality"),
+    "ttft_sim_s.p99": ("lower", 0.30, "quality"),
+    # longest a servable request sat blocked at the FIFO head (sim seconds)
+    "hol_block_max_s": ("lower", 0.50, "quality"),
+    # continuous-vs-lockstep comparison (bench_continuous): the whole point
+    # of the subsystem — a shrinking gain or growing TTFT ratio regresses it
+    "goodput_gain": ("higher", 0.10, "quality"),
+    "ttft_p95_ratio": ("lower", 0.15, "quality"),
     "completed": ("higher", 0.0, "structural"),
     "n_error": ("lower", 0.0, "structural"),
+    # forced-barrier bit-identity and the assembler's retrace bound are
+    # hard invariants: any movement fails
+    "bit_identical": ("higher", 0.0, "structural"),
+    "assembler_shapes": ("lower", 0.0, "structural"),
+    "gate_ok": ("higher", 0.0, "structural"),
 }
 
 

@@ -37,6 +37,7 @@ from repro.core.schemes import (  # noqa: F401
     scheme_table_markdown,
 )
 from repro.serving.backends import (  # noqa: F401
+    ContinuousBackend,
     EngineBackend,
     SyntheticBackend,
     VerificationBackend,
@@ -66,6 +67,8 @@ __all__ = [
     "CellObservation",
     "ChannelConfig",
     "ChannelState",
+    "ContinuousBackend",
+    "ContinuousEngine",
     "EngineBackend",
     "GatewayClient",
     "GatewayConfig",
@@ -96,7 +99,8 @@ __all__ = [
     "scheme_table_markdown",
 ]
 
-_LAZY_JAX = ("SpecEngine", "PagedKVCache", "PagePoolExhausted")
+_LAZY_JAX = ("SpecEngine", "PagedKVCache", "PagePoolExhausted",
+             "ContinuousEngine")
 
 
 def __getattr__(name):

@@ -6,17 +6,25 @@ analytic serving path (cell + synthetic backend) stays importable in
 milliseconds on any host.
 """
 
-from .backends import EngineBackend, SyntheticBackend, VerificationBackend  # noqa: F401
+from .backends import (  # noqa: F401
+    ContinuousBackend,
+    EngineBackend,
+    SyntheticBackend,
+    VerificationBackend,
+)
 from .cell import CellConfig, MultiSpinCell, RoundRecord  # noqa: F401
 from .scheduler import Request, RoundScheduler, SchedulerStats  # noqa: F401
 
 # kv_cache imports jax too (snapshot selection), so the paged-cache names
-# stay lazy alongside the engine; the gateway is stdlib-only but lazy to
+# stay lazy alongside the engine (continuous imports spec_engine, so its
+# names ride the same lazy group); the gateway is stdlib-only but lazy to
 # keep `import repro.serving` at its current cost
 _GATEWAY = ("MultiSpinGateway", "GatewayConfig", "GatewayClient",
             "MetricsHub", "RoundMetrics")
+_CONTINUOUS = ("ContinuousEngine", "StreamFSM", "BatchAssembler",
+               "IllegalTransition")
 _LAZY = ("SpecEngine", "StreamState", "PagedKVCache",
-         "PagePoolExhausted") + _GATEWAY
+         "PagePoolExhausted") + _CONTINUOUS + _GATEWAY
 
 
 def __getattr__(name):
@@ -26,6 +34,9 @@ def __getattr__(name):
     if name in ("PagedKVCache", "PagePoolExhausted"):
         from . import kv_cache
         return getattr(kv_cache, name)
+    if name in _CONTINUOUS:
+        from . import continuous
+        return getattr(continuous, name)
     if name in _GATEWAY:
         from . import gateway
         return getattr(gateway, name)

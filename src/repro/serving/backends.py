@@ -272,3 +272,100 @@ class EngineBackend:
                 draft_width=int(draft_width))
             sp.attach(res.output_len)
         return np.asarray(res.output_len, dtype=np.int64)[rows]
+
+
+class ContinuousBackend(EngineBackend):
+    """``EngineBackend`` driven through the continuous-batching engine
+    (``serving.continuous.ContinuousEngine``): verification batches are
+    dispatched asynchronously and landed later, so the cell's
+    ``schedule="continuous"`` mode can overlap the next round's drafting
+    with verification still in flight.
+
+    The split API is
+
+      * ``verify_async(lengths, requests, ...)`` — draft + verify dispatch
+        for exactly these requests (shape-bucketed; async, no host sync);
+        returns an opaque in-flight batch handle;
+      * ``collect(handle)`` — land the batch: the ONLY host sync; commits
+        accepted tokens, truncates rejected-draft pages, returns accepted
+        counts aligned with the handle's requests (0 for streams that
+        retired mid-flight).
+
+    ``verify`` (the plain protocol method) is dispatch + immediate collect,
+    so this backend also drops into the sync/pipelined schedules unchanged.
+    Engine state lives in the continuous engine; ``self.state`` is a view
+    onto it so every inherited accessor (``stream_tokens``, ``add_streams``
+    binding, pool stats) stays correct.
+    """
+
+    def __init__(self, engine, state, vhat: int = 64,
+                 admit_headroom: int = 32,
+                 keep_finished_tokens: bool = False,
+                 max_inflight: int = 2, max_batch: int | None = None,
+                 exact_shapes: bool = False, seed: int = 0):
+        import jax
+
+        from .continuous import ContinuousEngine
+
+        # cont must exist before super().__init__ assigns self.state
+        # (the property below delegates into it)
+        self.cont = ContinuousEngine(
+            engine, state, jax.random.PRNGKey(seed), vhat=vhat,
+            max_inflight=max_inflight, max_batch=max_batch,
+            exact_shapes=exact_shapes)
+        super().__init__(engine, state, vhat=vhat,
+                         admit_headroom=admit_headroom,
+                         keep_finished_tokens=keep_finished_tokens)
+
+    @property
+    def state(self):
+        return self.cont.state
+
+    @state.setter
+    def state(self, value):
+        self.cont.state = value
+
+    def ready_depth(self) -> int:
+        return self.cont.ready_depth()
+
+    def verify_async(self, lengths: np.ndarray, requests: Sequence,
+                     rng: np.random.Generator = None, key=None):
+        """Dispatch one draft+verify chain for ``requests`` without any
+        host synchronization; pair with ``collect``."""
+        lengths = np.asarray(lengths, dtype=np.int64)
+        rows = [self._row(r) for r in requests]
+        return self.cont.dispatch_round(rows, lengths, key=key)
+
+    def collect(self, handle) -> np.ndarray:
+        """Land an in-flight batch (host sync + commit + page reclaim)."""
+        return np.asarray(self.cont.commit(handle), dtype=np.int64)
+
+    def verify(self, lengths: np.ndarray, requests: Sequence,
+               rng: np.random.Generator, key=None,
+               mask: np.ndarray | None = None,
+               draft_width: int = 1) -> np.ndarray:
+        if int(draft_width) > 1:
+            raise NotImplementedError(
+                "continuous batching is single-draft (J=1); multidraft "
+                "token trees run on the lockstep EngineBackend")
+        lengths = np.asarray(lengths, dtype=np.int64)
+        if mask is not None:
+            keep = np.asarray(mask, dtype=bool)
+            out = np.zeros(len(requests), dtype=np.int64)
+            if keep.any():
+                sub = [r for r, m in zip(requests, keep) if m]
+                out[keep] = self.collect(
+                    self.verify_async(lengths[keep], sub, rng, key=key))
+            return out
+        return self.collect(self.verify_async(lengths, requests, rng,
+                                              key=key))
+
+    def release(self, requests: Sequence) -> None:
+        """Retire through the state machines first (legal from any phase;
+        an in-flight batch holding the stream skips it at commit), then the
+        inherited bookkeeping (tombstones, row-map cleanup)."""
+        for r in requests:
+            row = self._row_of.get(r.rid)
+            if row is not None:
+                self.cont.retire(row)
+        super().release(requests)

@@ -49,7 +49,7 @@ from repro.obs import trace
 from repro.serving.backends import SyntheticBackend, VerificationBackend
 from repro.serving.scheduler import Request, RoundScheduler
 
-SCHEDULES = ("sync", "pipelined")
+SCHEDULES = ("sync", "pipelined", "continuous")
 
 
 @dataclasses.dataclass
@@ -78,6 +78,17 @@ class RoundRecord:
     # requests (the occupancy the next admission decision sees); None for
     # backends without a pool_stats hook (synthetic draws)
     pool_stats: dict | None = None
+    # POST-admission scheduler queue depth at record time — the depth the
+    # next admission decision actually sees, matching /v1/stats (telemetry
+    # previously re-read the live queue off-thread)
+    queue_depth: int | None = None
+    # verification-batch fill: participating devices / max_batch (continuous
+    # batches are assembled from whichever streams are READY, so this is
+    # the direct cost signal of dispatching early vs waiting for stragglers)
+    batch_occupancy: float | None = None
+    # continuous schedule only: streams drafted-and-waiting when this batch
+    # dispatched (depth of the READY queue the assembler packs from)
+    ready_depth: int | None = None
 
 
 @dataclasses.dataclass
@@ -101,7 +112,10 @@ class CellConfig:
     max_batch: int = 8
     use_estimator: bool = False
     deadline_factor: float | None = None  # straggler deadline x median latency
-    schedule: str = "sync"                # "sync" | "pipelined"
+    schedule: str = "sync"                # "sync" | "pipelined" | "continuous"
+    # continuous schedule: verification batches allowed in flight at once
+    # (1 forces the lockstep barrier; 2+ overlaps drafting with verify)
+    max_inflight: int = 2
     seed: int = 0
 
     def __post_init__(self):
@@ -123,6 +137,27 @@ class CellConfig:
                 f"'server_drafting'): the pipelined schedule would overlap "
                 f"the server's own drafting with its own verification — "
                 f"use schedule='sync'")
+        if self.schedule == "continuous":
+            if cls.capabilities.server_drafting:
+                raise ValueError(
+                    f"scheme {self.scheme!r} drafts on the server: continuous "
+                    f"batching overlaps device drafting with in-flight "
+                    f"verification, which a server-drafting scheme cannot — "
+                    f"use schedule='sync'")
+            if cls.capabilities.multi_draft:
+                raise ValueError(
+                    f"scheme {self.scheme!r} is multi-draft: token-tree "
+                    f"verification runs lockstep rounds — use "
+                    f"schedule='sync'")
+            if self.deadline_factor is not None:
+                raise ValueError(
+                    "continuous batching makes deadline_factor redundant: "
+                    "stragglers no longer block a cohort (batches are "
+                    "assembled from whichever streams are ready), so "
+                    "straggler masking must be None")
+        if self.max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, "
+                             f"got {self.max_inflight}")
         # validate scheme_params against the scheme's declared schema now,
         # not at first plan() (build_controller repeats this cheaply)
         self.build_controller()
@@ -196,8 +231,17 @@ class MultiSpinCell:
         self._round_idx = 0
         self._pending_ver = 0.0      # pipelined: verification still in flight
         self._pending_rids: set[int] = set()   # whose tokens it verifies
-        self._drained_ver = 0.0      # pipelined: trailing ver already drained
+        self._drained_ver = 0.0      # trailing in-flight work already drained
         self._pipe_parity = 0
+        # continuous schedule: the event-driven simulated timeline.
+        # _cont_ready maps rid -> draft bookkeeping for streams that have
+        # dispatched drafting and become READY at ready_at; _cont_inflight
+        # holds dispatched verification batches until their done_at.
+        self._cont_now = 0.0
+        self._cont_last_commit = 0.0
+        self._cont_server_free = 0.0
+        self._cont_ready: dict[int, dict] = {}
+        self._cont_inflight: list[dict] = []
 
     # ------------------------------------------------------------------
     # observers (telemetry hook surface)
@@ -399,7 +443,8 @@ class MultiSpinCell:
         reproduces ``summary()``'s seconds_draft/upload/verify."""
         active_reqs = self.admit()
         if not active_reqs:
-            # idle: the in-flight verification (pipelined) completes while
+            # idle: in-flight work (pipelined trailing verification, or
+            # continuous batches whose streams all departed) completes while
             # nothing overlaps it — drain it so a later resume does not
             # overlap work that already finished
             if self._pending_ver:
@@ -410,12 +455,16 @@ class MultiSpinCell:
             self._drained_ver += self._pending_ver
             self._pending_ver = 0.0
             self._pending_rids = set()
+            if self._cont_inflight:
+                self._drain_continuous()
             return None
         args = None if trace.active() is None else {
             "schedule": self.config.schedule, "scheme": self.config.scheme}
         with trace.span("cell.step", cat="cell", args=args) as sp:
             if self.config.schedule == "pipelined":
                 rec = self._step_pipelined(active_reqs, key)
+            elif self.config.schedule == "continuous":
+                rec = self._step_continuous(active_reqs, key)
             else:
                 rec = self._step_sync(active_reqs, key)
             if sp is not trace.NULL_SPAN:
@@ -507,6 +556,8 @@ class MultiSpinCell:
             draft_width=int(plan.draft_width),
             t_draft=float(np.max(draft_lat[active])),
             t_upload=float(np.max(upload_lat[active])),
+            queue_depth=len(self.scheduler.queue),
+            batch_occupancy=float(active.sum()) / self.config.max_batch,
         )
         self.history.append(rec)
         self._round_idx += 1
@@ -590,6 +641,8 @@ class MultiSpinCell:
             draft_width=int(plan.draft_width),
             t_draft=float(np.max(draft_h[ok_h])),
             t_upload=float(np.max(upload_h[ok_h])),
+            queue_depth=len(self.scheduler.queue),
+            batch_occupancy=float(mask.sum()) / self.config.max_batch,
         )
         self.history.append(rec)
         self._round_idx += 1
@@ -598,6 +651,172 @@ class MultiSpinCell:
         rec.pool_stats = self._pool_stats()
         self._emit("on_round", rec)
         return rec
+
+    def _step_continuous(self, active_reqs: list[Request],
+                         key=None) -> RoundRecord:
+        """Continuous batching: per-stream rounds with no cohort barrier.
+
+        Event-driven simulated timeline, one committed verification batch
+        per ``step``:
+
+          1. every stream not already drafting/in-flight dispatches its next
+             draft NOW (planned by the configured scheme over exactly that
+             subset) and becomes READY at ``now + draft + upload``;
+          2. while fewer than ``max_inflight`` batches are in flight, the
+             (sequential) verification server packs a batch from whichever
+             streams are READY when it frees up — at most ``max_batch``,
+             earliest-ready first — and dispatches it; with a
+             ``ContinuousBackend`` the dispatch is genuinely asynchronous
+             (``verify_async``; results land in step 3);
+          3. the earliest-finishing batch commits: the clock jumps to its
+             completion, its streams' tokens are accepted, and those streams
+             re-enter drafting on the next step.
+
+        ``t_round`` is the inter-commit gap, so ``summary()`` wall-clock
+        telescopes to the timeline's end exactly like the other schedules.
+        A slow drafter now delays only its own stream — the batch occupancy
+        / goodput trade is visible per record (``batch_occupancy``,
+        ``ready_depth``)."""
+        rid_to_i = {r.rid: i for i, r in enumerate(active_reqs)}
+        # drop READY bookkeeping of departed streams (leave() mid-draft)
+        self._cont_ready = {rid: e for rid, e in self._cont_ready.items()
+                            if rid in rid_to_i}
+        busy = set(self._cont_ready)
+        for b in self._cont_inflight:
+            busy.update(b["rids"])
+
+        # --- 1. dispatch drafting for every idle stream -----------------
+        starters = [i for i, r in enumerate(active_reqs) if r.rid not in busy]
+        if starters:
+            self._refade()
+            alphas = self.planning_alphas(active_reqs)
+            t_slm = np.array([r.T_S for r in active_reqs])
+            sub = np.asarray(starters)
+            with trace.span("cell.plan", cat="cell"):
+                plan = self.controller.plan(alphas[sub], t_slm[sub],
+                                            self.rates[sub])
+            lengths = np.asarray(plan.lengths, dtype=np.int64)
+            bw = np.asarray(plan.bandwidth, dtype=np.float64)
+            draft, upload = self._latency_components(
+                plan, lengths, t_slm[sub], self.rates[sub])
+            for j, i in enumerate(starters):
+                self._cont_ready[active_reqs[i].rid] = {
+                    "ready_at": self._cont_now + draft[j] + upload[j],
+                    "length": int(lengths[j]), "bw": float(bw[j]),
+                    "draft": float(draft[j]), "upload": float(upload[j]),
+                    "predicted": float(plan.goodput),
+                }
+
+        # --- 2. assemble + dispatch verification batches ----------------
+        while (self._cont_ready
+               and len(self._cont_inflight) < self.config.max_inflight):
+            t_start = max(min(e["ready_at"]
+                              for e in self._cont_ready.values()),
+                          self._cont_server_free)
+            members = sorted(
+                (rid for rid, e in self._cont_ready.items()
+                 if e["ready_at"] <= t_start),
+                key=lambda rid: (self._cont_ready[rid]["ready_at"], rid),
+            )[:self.config.max_batch]
+            entries = [self._cont_ready.pop(rid) for rid in members]
+            reqs = [active_reqs[rid_to_i[rid]] for rid in members]
+            lens = np.array([e["length"] for e in entries], dtype=np.int64)
+            t_ver = self.controller.t_ver_model(len(members))
+            args = None if trace.active() is None else {
+                "K": len(members), "rids": [int(r) for r in members],
+                "ready_depth": len(self._cont_ready)}
+            with trace.span("cell.dispatch", cat="cell", args=args):
+                verify_async = getattr(self.backend, "verify_async", None)
+                if verify_async is not None:
+                    handle, accepted = verify_async(lens, reqs, self.rng,
+                                                    key=key), None
+                else:
+                    handle, accepted = None, np.asarray(
+                        self.backend.verify(lens, reqs, self.rng, key=key),
+                        dtype=np.int64)
+            self._cont_server_free = t_start + t_ver
+            self._cont_inflight.append({
+                "rids": list(members), "lengths": lens,
+                "bw": np.array([e["bw"] for e in entries]),
+                "t_ver": float(t_ver), "done_at": t_start + t_ver,
+                "t_draft": max(e["draft"] for e in entries),
+                "t_upload": max(e["upload"] for e in entries),
+                "t_ma": max(e["draft"] + e["upload"] for e in entries),
+                "predicted": float(np.mean([e["predicted"]
+                                            for e in entries])),
+                "ready_depth": len(self._cont_ready),
+                "handle": handle, "accepted": accepted,
+            })
+
+        # --- 3. commit the earliest-finishing batch ---------------------
+        batch = min(self._cont_inflight, key=lambda b: b["done_at"])
+        self._cont_inflight.remove(batch)
+        self._cont_now = batch["done_at"]
+        t_round = self._cont_now - self._cont_last_commit
+        self._cont_last_commit = self._cont_now
+        if batch["accepted"] is None:
+            with trace.span("cell.verify", cat="cell"):
+                acc_members = np.asarray(self.backend.collect(batch["handle"]),
+                                         dtype=np.int64)
+        else:
+            acc_members = batch["accepted"]
+
+        K = len(active_reqs)
+        accepted = np.zeros(K, dtype=np.int64)
+        lengths = np.zeros(K, dtype=np.int64)
+        bandwidth = np.zeros(K, dtype=np.float64)
+        participated = np.zeros(K, dtype=bool)
+        for j, rid in enumerate(batch["rids"]):
+            i = rid_to_i.get(rid)
+            if i is None:           # departed mid-verify: tokens discarded
+                continue
+            accepted[i] = acc_members[j]
+            lengths[i] = batch["lengths"][j]
+            bandwidth[i] = batch["bw"][j]
+            participated[i] = True
+        if self.estimator is not None:
+            self.estimator.update(np.maximum(accepted - 1, 0),
+                                  np.maximum(lengths, 1), mask=participated)
+
+        rec = RoundRecord(
+            lengths=lengths, bandwidth=bandwidth, accepted=accepted,
+            t_ma=float(batch["t_ma"]), t_ver=batch["t_ver"],
+            t_round=float(t_round),
+            predicted_goodput=batch["predicted"],
+            realized_goodput=float(np.sum(accepted) / t_round)
+            if t_round > 0 else 0.0,
+            active=participated,
+            rids=np.array([r.rid for r in active_reqs]),
+            t_draft=float(batch["t_draft"]),
+            t_upload=float(batch["t_upload"]),
+            queue_depth=len(self.scheduler.queue),
+            batch_occupancy=len(batch["rids"]) / self.config.max_batch,
+            ready_depth=int(batch["ready_depth"]),
+        )
+        self.history.append(rec)
+        self._round_idx += 1
+        self._retire(active_reqs, accepted, float(t_round),
+                     participated=participated)
+        rec.pool_stats = self._pool_stats()
+        self._emit("on_round", rec)
+        return rec
+
+    def _drain_continuous(self):
+        """Every stream departed with verification batches still in flight:
+        land them (returning engine results to the host) and bill the
+        trailing timeline so ``summary()`` and the scheduler agree."""
+        t_end = max(b["done_at"] for b in self._cont_inflight)
+        for b in self._cont_inflight:
+            if b["accepted"] is None:
+                self.backend.collect(b["handle"])
+        extra = max(0.0, t_end - self._cont_last_commit)
+        self.scheduler.stats.wall_time += extra
+        self.scheduler.clock += extra
+        self._drained_ver += extra
+        self._cont_inflight = []
+        self._cont_ready = {}
+        self._cont_now = max(self._cont_now, t_end)
+        self._cont_last_commit = self._cont_now
 
     # ------------------------------------------------------------------
     # driving loops

@@ -80,6 +80,7 @@ class _Stream:
         self.trace_id = f"{req.rid:x}-{uuid.uuid4().hex[:12]}"
         self.queue: asyncio.Queue = asyncio.Queue()
         self.streamed = 0            # capped tokens already sent
+        self.rounds = 0              # rounds THIS stream committed tokens in
         self.terminal = False        # a done/error/retired event was queued
         self.created_s = time.monotonic()
 
@@ -277,10 +278,15 @@ class MultiSpinGateway:
             if produced > 0:
                 tokens = self._round_tokens(st, produced)
                 st.streamed += produced
+                # "round" counts THIS stream's committed rounds: under the
+                # continuous schedule streams progress independently, so a
+                # cell-global index would skip numbers per client;
+                # "cell_round" keeps the global correlation key for traces
                 st.push("round", {
                     "rid": st.rid,
                     "trace_id": st.trace_id,
-                    "round": len(self.cell.history) - 1,
+                    "round": st.rounds,
+                    "cell_round": len(self.cell.history) - 1,
                     "n": produced,
                     "tokens": tokens,
                     "generated": st.streamed,
@@ -288,6 +294,7 @@ class MultiSpinGateway:
                     "draft_width": int(rec.draft_width),
                     "t_round": float(rec.t_round),
                 })
+                st.rounds += 1
             if st.req.done:
                 st.push("done", {
                     "rid": st.rid,

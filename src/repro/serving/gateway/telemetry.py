@@ -69,6 +69,11 @@ class RoundMetrics:
     admitted_total: int
     rejected_total: int
     completed_total: int
+    # verification-batch fill (participants / max_batch) — the continuous
+    # assembler's dispatch-early-vs-wait trade, 1.0 for full sync cohorts
+    batch_occupancy: float = 0.0
+    # continuous schedule: READY streams waiting when this batch dispatched
+    ready_depth: int = 0
 
 
 class _Histogram:
@@ -209,7 +214,12 @@ class MetricsHub:
                 schedule=cell.config.schedule if cell is not None else "",
                 n_planned=int(len(lengths)),
                 n_active=int(active.sum()),
-                queue_depth=(len(cell.scheduler.queue)
+                # the record carries the post-admission depth the round
+                # actually saw; reading the live queue here raced the
+                # gateway's step thread and could disagree with /v1/stats
+                queue_depth=(rec.queue_depth
+                             if rec.queue_depth is not None
+                             else len(cell.scheduler.queue)
                              if cell is not None else 0),
                 draft_width=int(rec.draft_width),
                 drafted_tokens=drafted,
@@ -236,6 +246,8 @@ class MetricsHub:
                 admitted_total=self.admitted_total,
                 rejected_total=self.rejected_total,
                 completed_total=stats.completed if stats is not None else 0,
+                batch_occupancy=float(rec.batch_occupancy or 0.0),
+                ready_depth=int(rec.ready_depth or 0),
             )
             self.ring.append(rm)
             self._trace(rm)
@@ -291,12 +303,14 @@ class MetricsHub:
                 "goodput_capped": cell.scheduler.stats.goodput,
                 "queue_depth": len(cell.scheduler.queue),
                 "active": len(cell.scheduler.active),
+                "hol_wait_max": cell.scheduler.stats.hol_wait_max,
             }
             ttfts = sorted(cell.scheduler.stats.ttft_s)
             if ttfts:
                 from repro.serving.gateway.loadgen import percentile
                 out["ttft_sim_s"] = {"p50": percentile(ttfts, 50),
                                      "p95": percentile(ttfts, 95),
+                                     "p99": percentile(ttfts, 99),
                                      "n": len(ttfts)}
         return out
 
@@ -366,6 +380,11 @@ class MetricsHub:
                    labels=[(f'phase="{p}"', f"{v:.6f}") for p, v in (
                        ("draft", last.t_draft), ("upload", last.t_upload),
                        ("verify", last.t_ver), ("total", last.t_round))])
+            metric("multispin_batch_occupancy",
+                   f"{last.batch_occupancy:.6f}",
+                   "last verification batch's fill: participants / max_batch")
+            metric("multispin_ready_queue_depth", last.ready_depth,
+                   "drafted streams awaiting batch assembly (continuous)")
             metric("multispin_pool_free_pages", last.pool_free_pages,
                    "KV page-pool free pages (0 without a paged engine)")
             metric("multispin_pool_occupancy",

@@ -44,6 +44,12 @@ class SchedulerStats:
     # the rounds until the first commit), appended as each request first
     # produces; telemetry reports percentiles over this
     ttft_s: list = dataclasses.field(default_factory=list)
+    # head-of-line blocking: the longest any SERVABLE request has so far
+    # waited at the FIFO head (simulated seconds).  Capacity-blocked heads
+    # hold the whole queue behind them — this is the tail cost the
+    # continuous engine's per-stream rounds attack; unservable heads are
+    # evicted and never counted
+    hol_wait_max: float = 0.0
 
     @property
     def goodput(self) -> float:
@@ -93,6 +99,12 @@ class RoundScheduler:
             self.active.append(self.queue.popleft())
             if on_admit is not None:
                 on_admit(head)
+        if self.queue:
+            # whatever still heads the queue is servable (unservable heads
+            # were evicted above) but blocked — by capacity or a full batch
+            self.stats.hol_wait_max = max(
+                self.stats.hol_wait_max,
+                self.clock - self.queue[0].submit_time)
         return self.active
 
     def device_profiles(self):

@@ -74,6 +74,31 @@ class StreamState:
     committed: list           # python-side committed token lists (B)
 
 
+@dataclasses.dataclass
+class RoundTicket:
+    """In-flight round work for a row subset, between dispatch and commit.
+
+    Produced by ``draft_rows``, completed by ``verify_rows``, consumed by
+    ``commit_rows``.  Everything on it is either host metadata or an
+    ASYNCHRONOUSLY dispatched jax array — holding a ticket never blocks, so
+    a continuous-batching driver can dispatch the next round's drafting
+    while this ticket's verification is still in flight.
+
+    ``rows`` may contain ``-1`` padding entries (batch-shape bucketing):
+    their page-table rows are all ``-1`` — cache writes dropped, reads
+    masked — and ``commit_rows`` skips them unconditionally.
+    """
+
+    rows: list | None             # engine rows; None = the full batch
+    lengths: np.ndarray           # per-row planned draft lengths
+    L: int                        # the dispatched window length (max/bucket)
+    freeze: np.ndarray            # per-row do-not-advance mask
+    pending: jax.Array            # (n,) pending tokens at dispatch
+    target_pos: jax.Array         # (n,) target positions at dispatch
+    draft: object | None = None   # DraftResult from generate_drafts
+    res: object | None = None     # VerifyResult from verify_drafts
+
+
 class SpecEngine:
     def __init__(self, target_cfg: ModelConfig, draft_cfg: ModelConfig,
                  max_len: int = 512, cache_dtype=jnp.float32,
@@ -304,6 +329,205 @@ class SpecEngine:
         d = dict(self.d_cache, pages=jnp.asarray(self.d_pages.page_table(rows)))
         return t, d
 
+    # ------------------------------------------------------------------
+    # round steps (reusable on row subsets — the continuous engine's core)
+    # ------------------------------------------------------------------
+
+    def _ticket_rows(self, ticket: RoundTicket) -> list:
+        return (list(range(len(ticket.freeze))) if ticket.rows is None
+                else ticket.rows)
+
+    def draft_rows(self, state: StreamState, rows, lengths, key,
+                   vhat: int = 64, freeze=None,
+                   pad_to: int = 0) -> RoundTicket:
+        """Dispatch SLM drafting for a row subset; returns a ``RoundTicket``.
+
+        ``rows=None`` drafts the full batch (the only mode contiguous
+        caches support — their forwards cannot run on row subsets).  Paged
+        engines accept any subset, including ``-1`` padding entries
+        (all--1 page-table rows: cache writes dropped, outputs discarded
+        at commit) so a continuous driver can bucket batch shapes.
+
+        Page mappings of live rows are extended to cover the L+1
+        verification window up front, ATOMICALLY: a pool-dry failure rolls
+        every grown row back and re-raises ``PagePoolExhausted``, so the
+        caller can hold the streams READY and retry once in-flight commits
+        return pages.  ``pad_to`` forces the dispatched window length
+        (length-bucket shaping); acceptance is still capped at the true
+        per-row ``lengths`` by the verifier.
+
+        Nothing here blocks on device results: the draft forwards are
+        dispatched asynchronously and the ticket only references their
+        output arrays."""
+        if needs_state_rollback(self.draft_cfg):
+            raise NotImplementedError(
+                "SSM draft models need snapshot drafting; assigned pairs use "
+                "attention SLMs (DESIGN.md §Arch-applicability)")
+        paged = self.cache_kind == "paged"
+        full = rows is None
+        if not paged and not full:
+            raise RuntimeError("contiguous caches run full-batch rounds "
+                               "only; row subsets need cache_kind='paged'")
+        row_list = (list(range(int(state.pending.shape[0]))) if full
+                    else [int(r) for r in rows])
+        n = len(row_list)
+        lengths = np.asarray(lengths, dtype=np.int64)
+        frz = (np.zeros(n, dtype=bool) if freeze is None
+               else np.asarray(freeze, dtype=bool).copy())
+        for i, b in enumerate(row_list):
+            if b < 0 or b in self._retired:
+                frz[i] = True
+        L = max(int(lengths.max()), int(pad_to))
+
+        if paged:
+            tpos_np = np.asarray(state.target_pos)
+            dpos_np = np.asarray(state.draft_pos)
+            # growth is clamped at the stream ceiling (window writes past
+            # max_len drop — the contiguous slab's semantics) and atomic: a
+            # pool-dry failure rolls every row back so the dispatch leaves
+            # the mappings untouched
+            cap = self.pages_per_stream * self.page_size
+            grown: list[tuple[int, int, int]] = []
+            with _span("engine.page_alloc", {"B": n, "L": L}):
+                try:
+                    for i, b in enumerate(row_list):
+                        if frz[i]:
+                            continue
+                        grown.append((b, self.t_pages.length(b),
+                                      self.d_pages.length(b)))
+                        self.t_pages.extend(b,
+                                            min(int(tpos_np[b]) + L + 1, cap))
+                        self.d_pages.extend(b,
+                                            min(int(dpos_np[b]) + L + 1, cap))
+                except PagePoolExhausted:
+                    for b, t_len, d_len in grown:
+                        self.t_pages.truncate(b, t_len)
+                        self.d_pages.truncate(b, d_len)
+                    raise
+            d_cache = dict(self.d_cache,
+                           pages=jnp.asarray(self.d_pages.page_table(row_list)))
+        else:
+            d_cache = self.d_cache
+
+        if full:
+            pending, dpos, tpos = (state.pending, state.draft_pos,
+                                   state.target_pos)
+        else:
+            idx = jnp.asarray([max(b, 0) for b in row_list], jnp.int32)
+            live = jnp.asarray([b >= 0 for b in row_list])
+            pending = jnp.where(live, jnp.take(state.pending, idx), 0)
+            dpos = jnp.where(live, jnp.take(state.draft_pos, idx), 0)
+            tpos = jnp.where(live, jnp.take(state.target_pos, idx), 0)
+
+        # --- step 2: distributed drafting (SLM) ---
+        with _span("engine.draft", {"B": n, "L": L}) as sp:
+            draft_res = generate_drafts(self.draft, self.d_params, d_cache,
+                                        pending, dpos, L, key, vhat=vhat)
+            sp.attach(draft_res.tokens)
+        self.d_cache = ({k: v for k, v in draft_res.cache.items()
+                         if k != "pages"} if paged else draft_res.cache)
+        return RoundTicket(rows=None if full else row_list, lengths=lengths,
+                           L=L, freeze=frz, pending=pending, target_pos=tpos,
+                           draft=draft_res)
+
+    def verify_rows(self, ticket: RoundTicket, key) -> RoundTicket:
+        """Dispatch the batched target pass + exact accept/reject for a
+        drafted ticket.  Asynchronous like ``draft_rows``: the returned
+        ticket's ``res`` arrays are in flight; ``commit_rows`` is the only
+        host sync point, so drafting for other streams can be dispatched
+        while this verification runs on device."""
+        paged = self.cache_kind == "paged"
+        row_list = self._ticket_rows(ticket)
+        n = len(row_list)
+        draft_res = ticket.draft
+        if paged:
+            t_cache = dict(self.t_cache,
+                           pages=jnp.asarray(self.t_pages.page_table(row_list)))
+        else:
+            t_cache = self.t_cache
+
+        # --- step 4: batched verification (LLM) ---
+        window = jnp.concatenate([ticket.pending[:, None], draft_res.tokens],
+                                 axis=1)                       # (n, L+1)
+        with _span("engine.target_pass", {"B": n, "W": ticket.L + 1}) as sp:
+            if needs_state_rollback(self.target_cfg):
+                logits, t_cache, snaps = self.target.forward_window(
+                    self.t_params, window, t_cache, ticket.target_pos,
+                    return_snapshots=True)
+            else:
+                logits, t_cache = self.target.forward_window(
+                    self.t_params, window, t_cache, ticket.target_pos)
+                snaps = None
+            sp.attach(logits)
+
+        draft_len = jnp.asarray(ticket.lengths, jnp.int32)
+        with _span("engine.verify_tokens", {"B": n, "L": ticket.L}) as sp:
+            res = verify_drafts(key, draft_res.tokens, draft_res.probs,
+                                logits, q_idx=draft_res.q_idx,
+                                q_val=draft_res.q_val, draft_len=draft_len)
+            sp.attach(res.accept_counts)
+
+        # target cache: row i processed [pending, d_1..d_n]; snapshot index
+        # n (0-based: snapshot t is the state after feeding window[:, :t+1])
+        if snaps is not None:
+            sel = select_snapshots(snaps, res.accept_counts,
+                                   self.target.CACHE_BATCH_AXES)
+            t_cache = merge_snapshot_into_cache(t_cache, sel)
+        self.t_cache = ({k: v for k, v in t_cache.items() if k != "pages"}
+                        if paged else t_cache)
+        ticket.res = res
+        return ticket
+
+    def commit_rows(self, state: StreamState, ticket: RoundTicket,
+                    skip=None):
+        """Land a verified ticket — THE host sync point of a round.
+
+        Blocks on the in-flight verification results, extends the committed
+        token lists, advances positions, and hands every page past the
+        accepted prefix back to the pool.  ``skip`` (aligned with the
+        ticket's rows) marks members that must NOT commit — streams retired
+        while the batch was in flight; rows retired through the engine and
+        ``-1`` padding rows are skipped automatically, so a mid-verify
+        disconnect never corrupts the rest of the batch.  Returns
+        ``(new_state, accepted)``: accepted counts incl. the bonus token,
+        0 for skipped/frozen rows, aligned with the ticket."""
+        paged = self.cache_kind == "paged"
+        row_list = self._ticket_rows(ticket)
+        n = len(row_list)
+        res = ticket.res
+        skip_np = (np.zeros(n, dtype=bool) if skip is None
+                   else np.asarray(skip, dtype=bool).copy())
+        skip_np |= ticket.freeze
+        for i, b in enumerate(row_list):
+            if b < 0 or b in self._retired:
+                skip_np[i] = True
+        with _span("engine.commit", {"B": n}):
+            out_np = np.asarray(res.output_tokens)   # the host sync point
+            n_np = np.asarray(res.accept_counts)
+            pend = np.asarray(state.pending).copy()
+            tpos = np.asarray(state.target_pos).copy()
+            dpos = np.asarray(state.draft_pos).copy()
+            accepted = np.zeros(n, dtype=np.int64)
+            with _span("engine.page_free", {"B": n}):
+                for i, b in enumerate(row_list):
+                    if skip_np[i]:
+                        continue
+                    k = int(n_np[i])
+                    accepted[i] = k + 1
+                    state.committed[b].extend(out_np[i, :k + 1].tolist())
+                    pend[b] = out_np[i, k]
+                    tpos[b] += k + 1
+                    dpos[b] += k + 1
+                    if paged:
+                        # speculative rejection hands pages straight back
+                        self.t_pages.truncate(b, int(tpos[b]))
+                        self.d_pages.truncate(b, int(dpos[b]))
+        new_state = StreamState(pending=jnp.asarray(pend),
+                                target_pos=jnp.asarray(tpos, jnp.int32),
+                                draft_pos=jnp.asarray(dpos, jnp.int32),
+                                committed=state.committed)
+        return new_state, accepted
+
     def spin_round(self, state: StreamState, lengths: np.ndarray,
                    key: jax.Array, vhat: int = 64,
                    freeze: np.ndarray | None = None, draft_width: int = 1,
@@ -337,7 +561,6 @@ class SpecEngine:
             return self._spin_round_tree(state, lengths, key, vhat=vhat,
                                          freeze=freeze, J=int(draft_width))
         B = state.pending.shape[0]
-        lengths = np.asarray(lengths, dtype=np.int64)
         frz_np = (np.zeros(B, dtype=bool) if freeze is None
                   else np.asarray(freeze, dtype=bool).copy())
         if self._retired:
@@ -346,115 +569,14 @@ class SpecEngine:
             raise NotImplementedError(
                 "freezing streams of an SSM/hybrid target needs a pre-window "
                 "state snapshot (see ROADMAP open items)")
-        L = int(lengths.max())
         k_draft, k_verify = jax.random.split(key)
-
-        paged = self.cache_kind == "paged"
-        if paged:
-            tpos_np = np.asarray(state.target_pos)
-            dpos_np = np.asarray(state.draft_pos)
-            # growth is clamped at the stream ceiling (window writes past
-            # max_len drop — the contiguous slab's semantics) and atomic: a
-            # pool-dry failure rolls every row back so the round leaves the
-            # mappings untouched
-            cap = self.pages_per_stream * self.page_size
-            grown: list[tuple[int, int, int]] = []
-            with _span("engine.page_alloc", {"B": B, "L": L}):
-                try:
-                    for b in range(B):
-                        if frz_np[b]:
-                            continue
-                        grown.append((b, self.t_pages.length(b),
-                                      self.d_pages.length(b)))
-                        self.t_pages.extend(b,
-                                            min(int(tpos_np[b]) + L + 1, cap))
-                        self.d_pages.extend(b,
-                                            min(int(dpos_np[b]) + L + 1, cap))
-                except PagePoolExhausted:
-                    for b, t_len, d_len in grown:
-                        self.t_pages.truncate(b, t_len)
-                        self.d_pages.truncate(b, d_len)
-                    raise
-            t_cache, d_cache = self._paged_views(B)
-        else:
-            t_cache, d_cache = self.t_cache, self.d_cache
-
-        # --- step 2: distributed drafting (SLM) ---
-        with _span("engine.draft", {"B": B, "L": L}) as sp:
-            draft_res = generate_drafts(self.draft, self.d_params, d_cache,
-                                        state.pending, state.draft_pos, L,
-                                        k_draft, vhat=vhat)
-            sp.attach(draft_res.tokens)
-        d_cache = draft_res.cache
-
-        # --- step 4: batched verification (LLM) ---
-        window = jnp.concatenate([state.pending[:, None], draft_res.tokens],
-                                 axis=1)                       # (B, L+1)
-        with _span("engine.target_pass", {"B": B, "W": L + 1}) as sp:
-            if needs_state_rollback(self.target_cfg):
-                logits, t_cache, snaps = self.target.forward_window(
-                    self.t_params, window, t_cache, state.target_pos,
-                    return_snapshots=True)
-            else:
-                logits, t_cache = self.target.forward_window(
-                    self.t_params, window, t_cache, state.target_pos)
-                snaps = None
-            sp.attach(logits)
-
-        draft_len = jnp.asarray(lengths, jnp.int32)
-        with _span("engine.verify_tokens", {"B": B, "L": L}) as sp:
-            res = verify_drafts(k_verify, draft_res.tokens, draft_res.probs,
-                                logits, q_idx=draft_res.q_idx,
-                                q_val=draft_res.q_val, draft_len=draft_len)
-            sp.attach(res.accept_counts)
-
-        # --- step 5: commit + rollback ---
-        # target cache: row b processed [pending, d_1..d_n]; snapshot index n
-        # (0-based: snapshot t is the state after feeding window[:, :t+1]).
-        if snaps is not None:
-            sel = select_snapshots(snaps, res.accept_counts,
-                                   self.target.CACHE_BATCH_AXES)
-            t_cache = merge_snapshot_into_cache(t_cache, sel)
-        self.t_cache = {k: v for k, v in t_cache.items() if k != "pages"} \
-            if paged else t_cache
-
-        # draft cache: processed [pending, d_1..d_{L-1}]; valid prefix for row
-        # b is pending + n accepted drafts. SSM draft state rolls back via
-        # re-prefill from scratch in this reference engine only when needed.
-        if needs_state_rollback(self.draft_cfg):
-            raise NotImplementedError(
-                "SSM draft models need snapshot drafting; assigned pairs use "
-                "attention SLMs (DESIGN.md §Arch-applicability)")
-        self.d_cache = {k: v for k, v in d_cache.items() if k != "pages"} \
-            if paged else d_cache
-
-        frz = jnp.asarray(frz_np)
-        adv = jnp.where(frz, 0, 1 + res.accept_counts)
-        new_target_pos = state.target_pos + adv
-        new_draft_pos = state.draft_pos + adv
-        sampled = jnp.take_along_axis(
-            res.output_tokens, res.accept_counts[:, None], axis=1)[:, 0]
-        new_pending = jnp.where(frz, state.pending, sampled)
-
-        out_np = np.asarray(res.output_tokens)
-        n_np = np.asarray(res.accept_counts)
-        for b in range(B):
-            if not frz_np[b]:
-                state.committed[b].extend(out_np[b, :n_np[b] + 1].tolist())
-
-        if paged:
-            # speculative rejection hands pages straight back to the pool
-            ntp, ndp = np.asarray(new_target_pos), np.asarray(new_draft_pos)
-            with _span("engine.page_free", {"B": B}):
-                for b in range(B):
-                    if not frz_np[b]:
-                        self.t_pages.truncate(b, int(ntp[b]))
-                        self.d_pages.truncate(b, int(ndp[b]))
-
-        new_state = StreamState(pending=new_pending, target_pos=new_target_pos,
-                                draft_pos=new_draft_pos,
-                                committed=state.committed)
-        return new_state, res, draft_res
+        # the lockstep round IS the three continuous steps on the full batch
+        # (same dispatch shapes and key discipline -> bit-identical tokens)
+        ticket = self.draft_rows(state, None, lengths, k_draft, vhat=vhat,
+                                 freeze=frz_np)
+        ticket = self.verify_rows(ticket, k_verify)
+        new_state, _ = self.commit_rows(state, ticket)
+        return new_state, ticket.res, ticket.draft
 
     # ------------------------------------------------------------------
     # token-tree multi-draft round (SpecInfer-style verification)

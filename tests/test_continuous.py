@@ -1,0 +1,352 @@
+"""Continuous-batching engine tests: per-stream state machines, batch
+assembly, forced-barrier bit-identity, and churn safety.
+
+The heavy rows share one smoke-scale paged ``SpecEngine`` configuration;
+the FSM/assembler/scheduler tests are pure-host and fast.
+"""
+
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.backends import ContinuousBackend
+from repro.serving.cell import CellConfig, MultiSpinCell
+from repro.serving.continuous import (
+    COMMITTING,
+    DRAFTING,
+    FINISHED,
+    PHASES,
+    READY,
+    RETIRED,
+    VERIFYING,
+    BatchAssembler,
+    ContinuousEngine,
+    IllegalTransition,
+    StreamFSM,
+)
+from repro.serving.scheduler import Request, RoundScheduler
+from repro.serving.spec_engine import SpecEngine
+
+
+def _engine(B=3, max_len=96, seed=0):
+    tcfg = get_config("qwen2.5-3b").smoke()
+    dcfg = tcfg.replace(num_layers=1, d_model=32, num_heads=2,
+                        num_kv_heads=1, head_dim=16, d_ff=64,
+                        name="draft-smoke")
+    eng = SpecEngine(tcfg, dcfg, max_len=max_len, cache_kind="paged",
+                     num_pages=B * 2 * (max_len // 16))
+    eng.init_params(jax.random.PRNGKey(seed))
+    return eng, tcfg
+
+
+def _prompts(tcfg, B=3, M=10, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (B, M), 0,
+                              tcfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# state machine
+# ---------------------------------------------------------------------------
+
+def test_fsm_legal_round_cycle():
+    f = StreamFSM(row=0)
+    for phase in (READY, VERIFYING, COMMITTING, DRAFTING,
+                  READY, VERIFYING, COMMITTING, FINISHED, RETIRED):
+        f.to(phase)
+    assert not f.live
+
+
+def test_fsm_illegal_transitions_raise():
+    illegal = [
+        (DRAFTING, VERIFYING), (DRAFTING, COMMITTING), (DRAFTING, FINISHED),
+        (READY, DRAFTING), (READY, COMMITTING),
+        (VERIFYING, READY), (VERIFYING, DRAFTING), (VERIFYING, FINISHED),
+        (COMMITTING, READY), (COMMITTING, VERIFYING),
+        (FINISHED, DRAFTING), (RETIRED, DRAFTING),
+    ]
+    for src, dst in illegal:
+        f = StreamFSM(row=0, phase=src)
+        with pytest.raises(IllegalTransition):
+            f.to(dst)
+
+
+def test_fsm_retire_legal_from_every_live_phase():
+    for src in PHASES:
+        f = StreamFSM(row=0, phase=src)
+        if src == RETIRED:
+            with pytest.raises(IllegalTransition):
+                f.to(RETIRED)
+        else:
+            assert f.to(RETIRED).phase == RETIRED
+
+
+# ---------------------------------------------------------------------------
+# batch assembler (shape bucketing — the prefill-bucketing idiom)
+# ---------------------------------------------------------------------------
+
+def test_assembler_retrace_bound_over_churny_ready_sets():
+    """12 distinct (K, L) ready-set shapes must collapse to the pow2 bucket
+    grid, and the trace hook must fire once per NEW shape only."""
+    asm = BatchAssembler(max_batch=8)
+    traced = []
+    asm.on_assemble_trace = traced.append
+    ready_sets = [(k, ln) for k in (1, 2, 3, 5) for ln in (3, 4, 6)]
+    assert len(ready_sets) == 12
+    for k, ln in ready_sets:
+        asm.assemble([(object(), ln)] * k)
+    # buckets: K in {1,2,4,8} x L in {4,8} -> at most 8 dispatch shapes
+    assert len(asm.shapes) <= 8 < len(ready_sets)
+    assert len(traced) == len(asm.shapes)      # one trace per new shape
+    assert all(s[0] in (1, 2, 4, 8) and s[1] in (4, 8) for s in asm.shapes)
+    # replaying the same churn adds no shapes and no traces
+    for k, ln in ready_sets:
+        asm.assemble([(object(), ln)] * k)
+    assert len(traced) == len(asm.shapes)
+
+
+def test_assembler_exact_mode_and_max_batch_split():
+    asm = BatchAssembler(max_batch=2, exact=True)
+    batches = asm.assemble([(i, 3) for i in range(5)])
+    assert [len(b) for b in batches] == [2, 2, 1]
+    assert (2, 3) in asm.shapes and (1, 3) in asm.shapes
+
+
+# ---------------------------------------------------------------------------
+# forced-barrier bit-identity (the correctness anchor)
+# ---------------------------------------------------------------------------
+
+def test_forced_barrier_bit_identical_to_lockstep():
+    B, M, L, R = 3, 10, 4, 4
+    base = jax.random.PRNGKey(42)
+    eng1, tcfg = _engine(B=B)
+    prompts = _prompts(tcfg, B=B, M=M)
+    st1 = eng1.start(prompts)
+    for r in range(R):
+        st1, _, _ = eng1.spin_round(st1, np.full(B, L),
+                                    jax.random.fold_in(base, r))
+
+    eng2, _ = _engine(B=B)
+    cont = ContinuousEngine(eng2, eng2.start(prompts), base,
+                            max_inflight=1, exact_shapes=True)
+    for b in range(B):
+        cont.add_stream(b, length=L)
+    for _ in range(R):
+        cont.step()
+
+    for b in range(B):
+        assert st1.committed[b] == cont.state.committed[b], \
+            f"stream {b} diverged under the forced barrier"
+    # a single dispatch shape: the barrier config never rebuckets
+    assert cont.assembler.shapes == {(B, L)}
+
+
+def test_overlapped_mode_commits_and_respects_budgets():
+    eng, tcfg = _engine(B=4)
+    prompts = _prompts(tcfg, B=4, M=10)
+    cont = ContinuousEngine(eng, eng.start(prompts), jax.random.PRNGKey(7),
+                            max_inflight=2)
+    for b in range(4):
+        cont.add_stream(b, length=3 + (b % 2), budget=8)
+    cont.drain()
+    for f in cont.fsm.values():
+        assert f.phase == FINISHED and f.generated >= 8
+    assert cont.commits and all(ev.occupancy > 0 for ev in cont.commits)
+    eng.t_pages.check_invariants()
+    eng.d_pages.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# churn: retire from every phase returns pages; mid-verify disconnect
+# ---------------------------------------------------------------------------
+
+def test_retire_returns_pages_from_every_phase():
+    eng, tcfg = _engine(B=3)
+    prompts = _prompts(tcfg, B=3, M=10)
+    cont = ContinuousEngine(eng, eng.start(prompts), jax.random.PRNGKey(3),
+                            max_inflight=2)
+    fsms = [cont.add_stream(b, length=3) for b in range(3)]
+    # row 0: retire straight from DRAFTING
+    assert fsms[0].phase == DRAFTING
+    used_before = eng.t_pages.num_allocated_pages
+    cont.retire(0)
+    assert eng.t_pages.num_allocated_pages < used_before
+    # rows 1-2: drive to READY then VERIFYING, retiring one at each phase
+    cont._dispatch_draft_group([fsms[1], fsms[2]], np.array([3, 3]))
+    assert fsms[1].phase == READY
+    used_before = eng.t_pages.num_allocated_pages
+    cont.retire(1)
+    assert fsms[1].phase == RETIRED
+    assert eng.t_pages.num_allocated_pages < used_before
+    cont._dispatch_verify([fsms[2]])
+    assert fsms[2].phase == VERIFYING
+    used_before = eng.t_pages.num_allocated_pages
+    cont.retire(2)
+    assert eng.t_pages.num_allocated_pages < used_before
+    # the in-flight batch still lands without corruption
+    cont._commit_batch(cont._inflight.popleft())
+    eng.t_pages.check_invariants()
+    eng.d_pages.check_invariants()
+    assert eng.t_pages.num_allocated_pages == 0
+
+
+def test_mid_verify_disconnect_does_not_corrupt_batch():
+    """A stream retired while its batch is in flight commits nothing and
+    returns its pages immediately; the other members commit normally."""
+    eng, tcfg = _engine(B=3)
+    prompts = _prompts(tcfg, B=3, M=10)
+    cont = ContinuousEngine(eng, eng.start(prompts), jax.random.PRNGKey(5),
+                            max_inflight=2)
+    handle = cont.dispatch_round([0, 1, 2], np.array([3, 3, 3]))
+    cont.retire(1)                        # disconnect mid-verify
+    acc = cont.commit(handle)
+    assert acc[1] == 0
+    assert acc[0] >= 1 and acc[2] >= 1
+    # survivors' streams advanced; the retired row did not
+    assert len(cont.state.committed[0]) > 10
+    assert len(cont.state.committed[1]) == 10
+    eng.t_pages.check_invariants()
+    eng.d_pages.check_invariants()
+    # the retired row is recyclable and a second retire is a no-op
+    cont.retire(1)
+
+
+def test_continuous_backend_serves_cell_with_churn():
+    """End-to-end: ContinuousBackend under schedule='continuous' with a
+    mid-session leave, against a real paged engine."""
+    eng, tcfg = _engine(B=4, max_len=96)
+    be = ContinuousBackend(eng, eng.start(_prompts(tcfg, B=4, M=8)),
+                           max_inflight=2)
+    cfg = CellConfig(scheme="fixed", L_fixed=4, L_max=8, max_batch=4,
+                     schedule="continuous", seed=0)
+    cell = MultiSpinCell(cfg, backend=be)
+    rng = np.random.default_rng(9)
+    for i in range(5):
+        cell.submit(Request(rid=i, prompt_len=8, max_new_tokens=8,
+                            alpha=0.8, T_S=float(rng.choice([0.004, 0.03]))))
+    cell.step()
+    cell.step()
+    # one device disconnects mid-session
+    gone = cell.scheduler.active[0].rid
+    cell.leave(gone)
+    summary = cell.drain()
+    assert cell.scheduler.stats.completed >= 4
+    assert summary["tokens"] > 0
+    assert all(r.batch_occupancy is not None and r.ready_depth is not None
+               for r in cell.history)
+    eng.t_pages.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# cell-level continuous schedule (synthetic, fast)
+# ---------------------------------------------------------------------------
+
+def test_continuous_schedule_synthetic_drains_and_records():
+    cfg = CellConfig(scheme="hete", max_batch=4, schedule="continuous",
+                     seed=0)
+    cell = MultiSpinCell(cfg)
+    rng = np.random.default_rng(2)
+    for i in range(6):
+        cell.submit(Request(rid=i, prompt_len=8, max_new_tokens=16,
+                            alpha=0.8, T_S=float(rng.choice([0.004, 0.03]))))
+    summary = cell.drain()
+    assert cell.scheduler.stats.completed == 6
+    assert summary["tokens"] > 0 and summary["goodput"] > 0
+    # per-batch records: occupancy in (0, 1], monotone non-negative gaps
+    for r in cell.history:
+        assert 0 < r.batch_occupancy <= 1
+        assert r.t_round >= 0
+        assert r.queue_depth is not None
+    # summary wall-clock telescopes to at least the last commit time
+    assert summary["seconds"] >= cell._cont_last_commit - 1e-9
+
+
+def test_continuous_config_validation():
+    with pytest.raises(ValueError, match="server"):
+        CellConfig(scheme="cen", max_batch=1, schedule="continuous")
+    with pytest.raises(ValueError, match="multi-draft"):
+        CellConfig(scheme="multidraft", schedule="continuous")
+    with pytest.raises(ValueError, match="deadline"):
+        CellConfig(scheme="hete", schedule="continuous", deadline_factor=2.0)
+    with pytest.raises(ValueError, match="max_inflight"):
+        CellConfig(scheme="hete", max_inflight=0)
+
+
+# ---------------------------------------------------------------------------
+# scheduler satellites: post-admission queue depth + head-of-line metric
+# ---------------------------------------------------------------------------
+
+def test_round_record_reports_post_admission_queue_depth():
+    cfg = CellConfig(scheme="fixed", max_batch=2, seed=0)
+    cell = MultiSpinCell(cfg)
+    for i in range(5):
+        cell.submit(Request(rid=i, prompt_len=8, max_new_tokens=64,
+                            alpha=0.8, T_S=0.009))
+    rec = cell.step()
+    # 2 admitted, 3 queued: the record must carry the POST-admission depth
+    assert rec.queue_depth == 3
+    assert rec.queue_depth == len(cell.scheduler.queue)
+
+
+def test_scheduler_hol_wait_tracks_blocked_servable_head():
+    s = RoundScheduler(max_batch=1)
+    s.submit(Request(rid=0, prompt_len=8, max_new_tokens=64))
+    s.submit(Request(rid=1, prompt_len=8, max_new_tokens=64))
+    s.admit()
+    assert s.stats.hol_wait_max == 0.0      # head blocked but no time passed
+    s.clock = 3.5
+    s.admit()
+    assert s.stats.hol_wait_max == pytest.approx(3.5)
+    s.clock = 5.0
+    s.admit()
+    assert s.stats.hol_wait_max == pytest.approx(5.0)
+    # head admitted -> empty queue contributes nothing further
+    s.active.clear()
+    s.admit()
+    assert s.stats.hol_wait_max == pytest.approx(5.0)
+
+
+# ---------------------------------------------------------------------------
+# closed-loop loadgen satellite
+# ---------------------------------------------------------------------------
+
+def test_loadgen_closed_loop_concurrent_clients():
+    from repro.serving.gateway import (
+        GatewayConfig,
+        LoadGenConfig,
+        MultiSpinGateway,
+        run_loadgen,
+    )
+
+    async def run():
+        cfg = CellConfig(scheme="hete", max_batch=4, schedule="continuous",
+                         seed=0)
+        gw = MultiSpinGateway(MultiSpinCell(cfg),
+                              GatewayConfig(port=0, idle_wait_s=0.02))
+        await gw.start()
+        try:
+            return await run_loadgen(
+                "127.0.0.1", gw.port,
+                LoadGenConfig(mode="closed", n_clients=3, think_time_s=0.005,
+                              n_requests=7, max_new_tokens_choices=(4, 8),
+                              seed=0))
+        finally:
+            await gw.stop()
+
+    report = asyncio.run(run())
+    assert report["mode"] == "closed" and report["n_clients"] == 3
+    assert report["n_error"] == 0
+    assert report["n_ok"] == 7
+    assert report["tokens"] > 0
+    # every request produced a TTFT and the sample is complete
+    assert report["ttft_s"]["n"] == 7
+
+
+def test_loadgen_rejects_unknown_mode():
+    from repro.serving.gateway import LoadGenConfig, run_loadgen
+
+    with pytest.raises(ValueError, match="mode"):
+        asyncio.run(run_loadgen("127.0.0.1", 1,
+                                LoadGenConfig(mode="burst")))

@@ -313,7 +313,7 @@ def test_percentile_matches_numpy():
         percentile([], 50)
     s = summarize([3.0, 1.0, 2.0])
     assert s["n"] == 3 and s["p50"] == 2.0 and s["max"] == 3.0
-    assert summarize([]) == {"p50": 0.0, "p90": 0.0, "p95": 0.0,
+    assert summarize([]) == {"p50": 0.0, "p90": 0.0, "p95": 0.0, "p99": 0.0,
                              "mean": 0.0, "max": 0.0, "n": 0}
 
 
