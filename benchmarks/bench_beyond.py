@@ -106,33 +106,52 @@ def run_engine(rounds: int = 10, K: int = 3, J_min: int = 2, J_max: int = 3,
     tree, verifies the whole tree in one ancestor-masked target pass, and
     commits the longest accepted root-to-leaf path.  ``J_min=2`` pins the
     plan to true multi-draft widths so the tree path cannot silently
-    degenerate to sequential verification."""
+    degenerate to sequential verification.
+
+    The workload runs twice — once with the default scatter-commit, once
+    with ``tree_commit="repair"`` — under a span tracer: the scatter run
+    must emit NO ``engine.cache_repair`` spans (the repair forward is
+    eliminated from the hot path) while committing bit-identical tokens."""
     import jax
 
     from repro.api import CellConfig, MultiSpinCell, Request
     from repro.configs import get_config
+    from repro.obs import trace
     from repro.serving import SpecEngine
     from repro.serving.backends import EngineBackend
 
-    tcfg = get_config("qwen2.5-3b").smoke()
-    dcfg = tcfg.replace(num_layers=1, d_model=32, num_heads=2, num_kv_heads=1,
-                        head_dim=16, d_ff=64, name="draft-smoke")
-    eng = SpecEngine(tcfg, dcfg, max_len=160, cache_kind="paged",
-                     num_pages=2 * K * (160 // 16))
-    eng.init_params(jax.random.PRNGKey(seed))
-    prompts = jax.random.randint(jax.random.PRNGKey(seed + 1), (K, 8), 0,
-                                 tcfg.vocab_size)
-    backend = EngineBackend(eng, eng.start(prompts))
-    cfg = CellConfig(scheme="multidraft",
-                     scheme_params={"J_min": J_min, "J_max": J_max},
-                     max_batch=K, L_max=L_max, seed=seed)
-    cell = MultiSpinCell(cfg, backend=backend)
-    rng = np.random.default_rng(seed)
-    for i in range(K):
-        cell.submit(Request(rid=i, prompt_len=8, max_new_tokens=10 ** 9,
-                            alpha=float(rng.choice([0.71, 0.74, 0.86])),
-                            T_S=0.009 * float(rng.uniform(0.85, 1.15))))
-    out = cell.run(rounds)
+    def serve(tree_commit: str):
+        tcfg = get_config("qwen2.5-3b").smoke()
+        dcfg = tcfg.replace(num_layers=1, d_model=32, num_heads=2,
+                            num_kv_heads=1, head_dim=16, d_ff=64,
+                            name="draft-smoke")
+        eng = SpecEngine(tcfg, dcfg, max_len=160, cache_kind="paged",
+                         num_pages=2 * K * (160 // 16),
+                         tree_commit=tree_commit)
+        eng.init_params(jax.random.PRNGKey(seed))
+        prompts = jax.random.randint(jax.random.PRNGKey(seed + 1), (K, 8), 0,
+                                     tcfg.vocab_size)
+        backend = EngineBackend(eng, eng.start(prompts))
+        cfg = CellConfig(scheme="multidraft",
+                         scheme_params={"J_min": J_min, "J_max": J_max},
+                         max_batch=K, L_max=L_max, seed=seed)
+        cell = MultiSpinCell(cfg, backend=backend)
+        rng = np.random.default_rng(seed)
+        for i in range(K):
+            cell.submit(Request(rid=i, prompt_len=8, max_new_tokens=10 ** 9,
+                                alpha=float(rng.choice([0.71, 0.74, 0.86])),
+                                T_S=0.009 * float(rng.uniform(0.85, 1.15))))
+        tracer = trace.install()
+        try:
+            out = cell.run(rounds)
+            spans = [sp.name for sp in tracer.snapshot()]
+        finally:
+            trace.uninstall()
+        committed = [list(c) for c in backend.state.committed]
+        return eng, cell, out, spans, committed
+
+    eng, cell, out, spans, committed = serve("scatter")
+    _, _, _, repair_spans, repair_committed = serve("repair")
     # hard invariants: dead-branch pages all returned, no allocator leak
     eng.t_pages.check_invariants()
     eng.d_pages.check_invariants()
@@ -148,10 +167,16 @@ def run_engine(rounds: int = 10, K: int = 3, J_min: int = 2, J_max: int = 3,
         "J_min": min(J_used),
         "J_max_used": max(J_used),
         "free_pages": eng.pool_stats()["free_pages"],
+        "repair_spans": spans.count("engine.cache_repair"),
+        "kv_commit_spans": spans.count("engine.kv_commit"),
+        "repair_mode_spans": repair_spans.count("engine.cache_repair"),
+        "commit_parity": int(committed == repair_committed),
         "derived": (f"goodput={out['goodput']:.1f} "
                     f"tokens/round={tokens_per_round:.1f} "
                     f"J_used={sorted(set(J_used))} "
-                    f"rounds={len(cell.history)}"),
+                    f"rounds={len(cell.history)} "
+                    f"repair_spans={spans.count('engine.cache_repair')} "
+                    f"commit_parity={int(committed == repair_committed)}"),
     }
     return [row]
 
@@ -172,6 +197,21 @@ def smoke(rows: list[dict]) -> None:
                             "< 2 — the tree path was not exercised")
         if r["rounds"] == 0:
             failures.append(f"{r['name']}: no rounds executed")
+        if r.get("repair_spans", 0) != 0:
+            failures.append(f"{r['name']}: {r['repair_spans']} "
+                            "engine.cache_repair span(s) in the default "
+                            "scatter-commit run — the repair forward is "
+                            "back in the hot path")
+        if r.get("kv_commit_spans", 1) == 0:
+            failures.append(f"{r['name']}: no engine.kv_commit spans — "
+                            "scatter-commit never ran despite J >= 2")
+        if r.get("commit_parity", 1) != 1:
+            failures.append(f"{r['name']}: scatter-commit and repair-forward "
+                            "committed different tokens at the same seed")
+        if r.get("repair_mode_spans", 1) == 0:
+            failures.append(f"{r['name']}: the repair-mode control run "
+                            "emitted no engine.cache_repair spans — the "
+                            "span check is vacuous (span renamed?)")
     if failures:
         raise SystemExit("beyond smoke FAILED:\n  " + "\n  ".join(failures))
     print("beyond smoke OK")

@@ -97,6 +97,22 @@ def _cases(smoke: bool):
     dt = jax.nn.softplus(rnd(b, s, h))
     A = -jnp.exp(rnd(h))
     B_ssd, C_ssd = rnd(b, s, g, n), rnd(b, s, g, n)
+    # fused verify+sample: drafts really drawn from the uploaded truncated
+    # distribution so the accept test is exercised at realistic rates
+    from repro.core.verification import truncate_renormalize
+    vhat = 16
+    f_q = jax.nn.softmax(rnd(B, T, V), axis=-1)
+    fq_idx, fq_val = truncate_renormalize(f_q.reshape(B * T, V), vhat)
+    fq_idx = fq_idx.reshape(B, T, vhat)
+    fq_val = fq_val.reshape(B, T, vhat)
+    f_j = jax.random.categorical(next(keys),
+                                 jnp.log(jnp.maximum(fq_val, 1e-30)))
+    f_toks = jnp.take_along_axis(fq_idx, f_j[..., None], -1)[..., 0]
+    f_probs = jnp.take_along_axis(fq_val, f_j[..., None], -1)[..., 0]
+    f_logits = rnd(B, T + 1, V)
+    f_uacc = jax.random.uniform(next(keys), (B, T))
+    f_ures = jax.random.uniform(next(keys), (B,))
+    f_dlen = jnp.full((B,), T, jnp.int32)
 
     return [
         ("flash_attention", ops.flash_attention, ref.flash_attention_ref,
@@ -117,6 +133,10 @@ def _cases(smoke: bool):
          ref.gather_softmax_prob_ref, (logits, token_ids)),
         ("residual_sample", ops.residual_sample, ref.residual_sample_ref,
          (p_rows, q_rows, u)),
+        ("fused_verify_sample", ops.fused_verify_sample,
+         ref.fused_verify_sample_ref,
+         (f_logits, f_toks, f_probs, fq_idx, fq_val, f_uacc, f_ures,
+          f_dlen)),
         ("ssd_scan",
          lambda x_, dt_, A_, B_, C_: ops.ssd_scan(x_, dt_, A_, B_, C_,
                                                   chunk=chunk),

@@ -11,7 +11,10 @@ tolerance bands:
   * **timing** metrics (us_per_call, GB/s, tokens/s, real-wall TTFT, ...)
     are host-dependent — they gate only when the fresh and baseline
     envelopes report the SAME host (``--strict-timing`` forces gating,
-    cross-host they are reported informationally).
+    cross-host they are reported informationally).  Rows that record a
+    kernel ``backend`` (bench_kernels) additionally require the SAME
+    backend on both sides: a ref-mode baseline is never timing-compared
+    against an interpret/pallas fresh run, even under ``--strict-timing``.
 
 Exit status is the number of failed comparisons (0 = pass), so CI can run::
 
@@ -92,6 +95,11 @@ def _compare_rows(fname: str, base_row: dict, fresh_row: dict,
                   gate_timing: bool, report: list) -> int:
     """Append comparison lines to ``report``; return failure count."""
     failures = 0
+    # rows timed on different kernel backends (e.g. a committed ref-mode
+    # baseline vs a fresh interpret/pallas run) are never timing-comparable,
+    # whatever the host and even under --strict-timing
+    if base_row.get("backend") != fresh_row.get("backend"):
+        gate_timing = False
     base = _flatten(base_row)
     fresh = _flatten(fresh_row)
     name = base_row.get("name", "?")

@@ -16,6 +16,10 @@ verification backends pluggable (``SyntheticBackend`` for analytic sweeps,
 ``EngineBackend`` for real JAX models).  ``SpecEngine`` and the
 paged-KV-cache names are resolved lazily to keep the analytic path free of
 jax import cost.
+
+Layer-by-layer documentation lives in ``docs/`` — ``architecture.md``
+(request lifecycle), ``kernels.md`` (Pallas ops + dispatch),
+``benchmarks.md`` (tracked perf baselines).
 """
 
 from repro.core.channel import ChannelConfig, ChannelState  # noqa: F401

@@ -40,6 +40,13 @@ class DraftForest:
     device-side step).  Axes: (B, J, L[, Vhat]); ``cache`` is the SLM cache
     after the LAST run — every run re-draws from the same committed prefix,
     so run j's window writes fully shadow run j-1's.
+
+    ``windows`` (with ``keep_windows=True``) snapshots every run's window
+    K/V — cache-leaf name -> (Ln, B, J, L, KV, D), the K/V written at slots
+    [pos + 1, pos + L] by run j (slot ``pos`` holds the pending token,
+    identical across runs).  The engine's scatter-commit selects the
+    winning run's rows from here instead of re-forwarding the accepted
+    path through the draft model.
     """
 
     tokens: jax.Array
@@ -47,11 +54,16 @@ class DraftForest:
     q_idx: jax.Array
     q_val: jax.Array
     cache: object
+    windows: dict | None = None
+
+
+_KV_LEAVES = ("k", "v", "dense_k", "dense_v")
 
 
 def generate_draft_forest(model, params, cache, pending: jax.Array,
                           pos: jax.Array, L: int, J: int, key: jax.Array,
-                          vhat: int, temperature: float = 1.0) -> DraftForest:
+                          vhat: int, temperature: float = 1.0,
+                          keep_windows: bool = False) -> DraftForest:
     """Draft J independent length-L runs per stream.
 
     Run 0 consumes ``key`` exactly like ``generate_drafts`` (J = 1 is
@@ -59,9 +71,17 @@ def generate_draft_forest(model, params, cache, pending: jax.Array,
     Each run starts from the same committed prefix: its window writes land
     at cache slots [pos, pos + L], past every valid position, so runs never
     see each other (causal masking) and the last run's writes are the only
-    survivors — the engine repairs the cache to the accepted path anyway.
+    survivors.  ``keep_windows=True`` snapshots each run's window K/V right
+    after the run (the cache only retains the LAST run's) so the engine can
+    scatter-commit the accepted branch without a repair forward.
     """
+    from repro.models.layers import gather_kv_window
+
     tokens, probs, q_idx, q_val = [], [], [], []
+    snaps: list[dict] = []
+    if keep_windows:
+        win_pos = pos[:, None] + 1 + jnp.arange(L)[None, :]     # (B, L)
+        page_table = cache.get("pages") if isinstance(cache, dict) else None
     for j in range(J):
         kj = key if j == 0 else jax.random.fold_in(key, j)
         res = generate_drafts(model, params, cache, pending, pos, L, kj,
@@ -71,11 +91,20 @@ def generate_draft_forest(model, params, cache, pending: jax.Array,
         probs.append(res.probs)
         q_idx.append(res.q_idx)
         q_val.append(res.q_val)
+        if keep_windows:
+            snaps.append({leaf: gather_kv_window(cache[leaf], win_pos,
+                                                 page_table=page_table)
+                          for leaf in _KV_LEAVES if leaf in cache})
+    windows = None
+    if keep_windows:
+        windows = {leaf: jnp.stack([s[leaf] for s in snaps], axis=2)
+                   for leaf in snaps[0]}                # (Ln, B, J, L, KV, D)
     return DraftForest(tokens=jnp.stack(tokens, axis=1),
                        probs=jnp.stack(probs, axis=1),
                        q_idx=jnp.stack(q_idx, axis=1),
                        q_val=jnp.stack(q_val, axis=1),
-                       cache=cache)
+                       cache=cache,
+                       windows=windows)
 
 
 def generate_drafts(model, params, cache, pending: jax.Array, pos: jax.Array,

@@ -100,34 +100,37 @@ def verify_drafts(key: jax.Array,
     B, L = draft_tokens.shape
     V = target_logits.shape[-1]
     k_accept, k_resid, k_bonus = jax.random.split(key, 3)
-
-    # p_L(x_l) for every drafted position — fused softmax+gather kernel.
-    flat_logits = target_logits[:, :L].reshape(B * L, V)
-    p_target = kops.gather_softmax_prob(
-        flat_logits, draft_tokens.reshape(B * L)).reshape(B, L)
-
-    ratio = p_target / jnp.maximum(draft_probs, 1e-30)
     u = jax.random.uniform(k_accept, (B, L))
-    accept = u < jnp.minimum(ratio, 1.0)                      # eq. 4
-    if draft_len is not None:
-        accept = accept & (jnp.arange(L)[None, :] < draft_len[:, None])
-    prefix_ok = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
-    n_acc = jnp.sum(prefix_ok, axis=-1)                       # (B,) first-rej index
-
-    # --- calibrated residual sample at the first rejected position (eq. 5) ---
-    sel = jnp.minimum(n_acc, L - 1)
-    logits_rej = jnp.take_along_axis(
-        target_logits, sel[:, None, None], axis=1)[:, 0]      # (B, V)
-    p_rej = jax.nn.softmax(logits_rej.astype(jnp.float32), axis=-1)
-    if q_dense is not None:
-        q_rej = jnp.take_along_axis(q_dense, sel[:, None, None], axis=1)[:, 0]
-    else:
-        idx_rej = jnp.take_along_axis(q_idx, sel[:, None, None], axis=1)[:, 0]
-        val_rej = jnp.take_along_axis(q_val, sel[:, None, None], axis=1)[:, 0]
-        q_rej = _scatter_last(jnp.zeros((B, V), jnp.float32), idx_rej,
-                              val_rej.astype(jnp.float32))
     u_resid = jax.random.uniform(k_resid, (B,))
-    calibrated = kops.residual_sample(p_rej, q_rej, u_resid)  # (B,)
+
+    if q_dense is None:
+        # Sparse uplink-compressed SLM rows (the engine hot path): the
+        # accept test + prefix count + calibrated residual token run as ONE
+        # fused dispatch — the dense residual distribution never
+        # materializes between ops (eq. 4 + eq. 5 in one kernel).
+        accept, n_acc, calibrated = kops.fused_verify_sample(
+            target_logits, draft_tokens, draft_probs, q_idx, q_val,
+            u, u_resid, draft_len)
+    else:
+        # p_L(x_l) for every drafted position — fused softmax+gather kernel.
+        flat_logits = target_logits[:, :L].reshape(B * L, V)
+        p_target = kops.gather_softmax_prob(
+            flat_logits, draft_tokens.reshape(B * L)).reshape(B, L)
+
+        ratio = p_target / jnp.maximum(draft_probs, 1e-30)
+        accept = u < jnp.minimum(ratio, 1.0)                  # eq. 4
+        if draft_len is not None:
+            accept = accept & (jnp.arange(L)[None, :] < draft_len[:, None])
+        prefix_ok = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
+        n_acc = jnp.sum(prefix_ok, axis=-1)                   # first-rej index
+
+        # --- calibrated residual sample at the first rejection (eq. 5) ---
+        sel = jnp.minimum(n_acc, L - 1)
+        logits_rej = jnp.take_along_axis(
+            target_logits, sel[:, None, None], axis=1)[:, 0]  # (B, V)
+        p_rej = jax.nn.softmax(logits_rej.astype(jnp.float32), axis=-1)
+        q_rej = jnp.take_along_axis(q_dense, sel[:, None, None], axis=1)[:, 0]
+        calibrated = kops.residual_sample(p_rej, q_rej, u_resid)  # (B,)
 
     # --- bonus token when the whole draft is accepted ---
     true_len = draft_len if draft_len is not None else jnp.full((B,), L)

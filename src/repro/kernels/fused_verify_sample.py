@@ -1,0 +1,214 @@
+"""Fused draft-verification + calibrated-sampling Pallas kernel.
+
+The verify hot path ran THREE dispatches per round: ``gather_softmax_prob``
+over the (B*L, V) drafted-position logits, the jnp accept-test/cumprod, and
+``residual_sample`` over dense (B, V) rows — the middle one forcing the
+dense residual distribution (softmax + sparse-q scatter) to materialize in
+HBM between the other two.  This kernel does the whole chain in one
+``pallas_call`` per batch row, streaming the vocab tiles three times within
+one sequential grid:
+
+  phase 0  online softmax max/denominator for every drafted position plus
+           the drafted token's logit; at the last tile run the accept test
+           ``u < min(1, p_L/p_S)``, the prefix-acceptance count, and record
+           the first-rejected row ``sel`` and its softmax stats.
+  phase 1  residual mass Z_r = sum max(p_sel - q_sel, 0), rebuilding the
+           sparse SLM row (idx, val) tile-locally, plus the argmax(p)
+           degenerate fallback.
+  phase 2  inverse-CDF crossing of u_resid * Z_r -> calibrated token.
+
+Uniforms are drawn by the caller (``core.verification.verify_drafts``) with
+the unchanged key splits, so the committed tokens are distributed exactly as
+the unfused path.  The bonus token on full acceptance stays outside.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(dlen_ref, u_res_ref, tok_ids_ref, probs_ref, u_acc_ref,
+            logits_ref, qidx_ref, qval_ref,
+            acc_ref, nacc_ref, out_ref,
+            m_scr, z_scr, pick_scr, sel_scr, res_scr,
+            *, L: int, Lr: int, bv: int, n_v: int):
+    phase = pl.program_id(1)
+    vi = pl.program_id(2)
+
+    logits = logits_ref[0].astype(jnp.float32)              # (Lr, bv)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (Lr, bv), 1) + vi * bv
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Lr, 1), 0)
+
+    # ---- phase 0: online softmax stats + picked logit per drafted row ----
+    @pl.when((phase == 0) & (vi == 0))
+    def _init0():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        z_scr[...] = jnp.zeros_like(z_scr)
+        pick_scr[...] = jnp.full_like(pick_scr, _NEG)
+
+    @pl.when(phase == 0)
+    def _stats():
+        m_prev = m_scr[:, :1]                               # (Lr, 1)
+        m_tile = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_tile)
+        corr = jnp.exp(m_prev - m_new)
+        z_new = z_scr[:, :1] * corr + jnp.sum(
+            jnp.exp(logits - m_new), axis=-1, keepdims=True)
+
+        ids = tok_ids_ref[0][:, None]                       # (Lr, 1)
+        hit = cols == ids
+        picked_tile = jnp.max(jnp.where(hit, logits, _NEG), axis=-1,
+                              keepdims=True)
+        pick_new = jnp.maximum(pick_scr[:, :1], picked_tile)
+
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        z_scr[...] = jnp.broadcast_to(z_new, z_scr.shape)
+        pick_scr[...] = jnp.broadcast_to(pick_new, pick_scr.shape)
+
+        @pl.when(vi == n_v - 1)
+        def _accept():
+            p_t = jnp.exp(pick_new - m_new) / z_new          # (Lr, 1)
+            ratio = p_t[:, 0] / jnp.maximum(probs_ref[0], 1e-30)
+            live = rows[:, 0] < dlen_ref[0, 0]
+            acc = (u_acc_ref[0] < jnp.minimum(ratio, 1.0)) & live
+            prefix = jnp.cumprod(acc.astype(jnp.int32))
+            n_acc = jnp.sum(prefix)
+            acc_ref[0, :] = acc.astype(jnp.int32)
+            nacc_ref[0, 0] = n_acc
+            sel = jnp.minimum(n_acc, L - 1)
+            is_sel = rows[:, 0] == sel
+            sel_scr[0, 0] = sel.astype(jnp.float32)
+            sel_scr[0, 1] = jnp.sum(jnp.where(is_sel, m_new[:, 0], 0.0))
+            sel_scr[0, 2] = jnp.sum(jnp.where(is_sel, z_new[:, 0], 0.0))
+
+    def _residual_tile():
+        """max(p_sel - q_sel, 0) over this vocab tile, plus p_sel itself."""
+        sel = sel_scr[0, 0].astype(jnp.int32)
+        m_sel, z_sel = sel_scr[0, 1], sel_scr[0, 2]
+        is_sel = rows == sel                                 # (Lr, 1)
+        l_sel = jnp.sum(jnp.where(is_sel, logits, 0.0), axis=0)     # (bv,)
+        p = jnp.exp(l_sel - m_sel) / z_sel
+        idx_sel = jnp.sum(jnp.where(is_sel, qidx_ref[0], 0), axis=0)
+        val_sel = jnp.sum(
+            jnp.where(is_sel, qval_ref[0].astype(jnp.float32), 0.0), axis=0)
+        q = jnp.sum(jnp.where(idx_sel[:, None] == cols[:1], val_sel[:, None],
+                              0.0), axis=0)                  # (bv,)
+        return p, jnp.maximum(p - q, 0.0)
+
+    # ---- phase 1: residual mass + argmax(p) fallback ----
+    @pl.when((phase == 1) & (vi == 0))
+    def _init1():
+        res_scr[...] = jnp.zeros_like(res_scr)
+        res_scr[0, 3] = -1.0                                 # picked token
+        res_scr[0, 4] = _NEG                                 # best p
+        res_scr[0, 5] = -1.0                                 # argmax col
+
+    @pl.when(phase == 1)
+    def _mass():
+        p, r = _residual_tile()
+        res_scr[0, 0] = res_scr[0, 0] + jnp.sum(r)
+        m_tile = jnp.max(p)
+        arg_tile = jnp.max(jnp.where(p == m_tile, cols[0], -1))
+
+        @pl.when(m_tile > res_scr[0, 4])
+        def _upd():
+            res_scr[0, 4] = m_tile
+            res_scr[0, 5] = arg_tile.astype(jnp.float32)
+
+    # ---- phase 2: inverse-CDF crossing ----
+    @pl.when(phase == 2)
+    def _pick():
+        _, r = _residual_tile()
+        target = u_res_ref[0, 0] * res_scr[0, 0]
+        prev = res_scr[0, 1]
+        tile_cum = prev + jnp.cumsum(r)                      # (bv,)
+        crossed = tile_cum > target
+        idx_in_tile = jnp.argmax(crossed)
+        has = jnp.any(crossed)
+
+        @pl.when(has & (res_scr[0, 3] < 0))
+        def _record():
+            res_scr[0, 3] = (vi * bv + idx_in_tile).astype(jnp.float32)
+
+        res_scr[0, 1] = prev + jnp.sum(r)
+
+        @pl.when(vi == n_v - 1)
+        def _finish():
+            degenerate = res_scr[0, 0] <= 0.0
+            fallback = res_scr[0, 5]
+            picked = res_scr[0, 3]
+            picked = jnp.where(picked < 0, fallback, picked)
+            out_ref[0, 0] = jnp.where(degenerate, fallback,
+                                      picked).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bv", "interpret"))
+def fused_verify_sample_pallas(target_logits: jax.Array, draft_tokens: jax.Array,
+                               draft_probs: jax.Array, q_idx: jax.Array,
+                               q_val: jax.Array, u_accept: jax.Array,
+                               u_resid: jax.Array, draft_len: jax.Array,
+                               bv: int = 2048, interpret: bool = False):
+    """See ``ref.fused_verify_sample_ref`` for shapes and semantics."""
+    B, L = draft_tokens.shape
+    V = target_logits.shape[-1]
+    Vhat = q_idx.shape[-1]
+
+    logits = target_logits[:, :L]                            # (B, L, V)
+    Lr = -(-L // 8) * 8
+    l_pad = Lr - L
+    v_pad = (-V) % bv
+    if l_pad or v_pad:
+        logits = jnp.pad(logits, ((0, 0), (0, l_pad), (0, v_pad)),
+                         constant_values=_NEG)
+        draft_tokens = jnp.pad(draft_tokens, ((0, 0), (0, l_pad)))
+        draft_probs = jnp.pad(draft_probs, ((0, 0), (0, l_pad)),
+                              constant_values=1.0)
+        u_accept = jnp.pad(u_accept, ((0, 0), (0, l_pad)), constant_values=1.0)
+        q_idx = jnp.pad(q_idx, ((0, 0), (0, l_pad), (0, 0)))
+        q_val = jnp.pad(q_val, ((0, 0), (0, l_pad), (0, 0)))
+    n_v = logits.shape[-1] // bv
+
+    dlen2d = jnp.minimum(draft_len, L).astype(jnp.int32)[:, None]
+    u_res2d = u_resid.astype(jnp.float32)[:, None]
+
+    acc, nacc, tok = pl.pallas_call(
+        functools.partial(_kernel, L=L, Lr=Lr, bv=bv, n_v=n_v),
+        grid=(B, 3, n_v),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, ph, vi: (b, 0)),       # draft_len
+            pl.BlockSpec((1, 1), lambda b, ph, vi: (b, 0)),       # u_resid
+            pl.BlockSpec((1, Lr), lambda b, ph, vi: (b, 0)),      # tokens
+            pl.BlockSpec((1, Lr), lambda b, ph, vi: (b, 0)),      # p_S
+            pl.BlockSpec((1, Lr), lambda b, ph, vi: (b, 0)),      # u_accept
+            pl.BlockSpec((1, Lr, bv), lambda b, ph, vi: (b, 0, vi)),
+            pl.BlockSpec((1, Lr, Vhat), lambda b, ph, vi: (b, 0, 0)),
+            pl.BlockSpec((1, Lr, Vhat), lambda b, ph, vi: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Lr), lambda b, ph, vi: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, ph, vi: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, ph, vi: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Lr), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Lr, 128), jnp.float32),   # online max
+            pltpu.VMEM((Lr, 128), jnp.float32),   # online denominator
+            pltpu.VMEM((Lr, 128), jnp.float32),   # picked logit
+            pltpu.VMEM((1, 128), jnp.float32),    # sel / m_sel / z_sel
+            pltpu.VMEM((1, 128), jnp.float32),    # Z_r / cum / tok / argmax
+        ],
+        interpret=interpret,
+    )(dlen2d, u_res2d, draft_tokens.astype(jnp.int32), draft_probs, u_accept,
+      logits, q_idx.astype(jnp.int32), q_val)
+    return acc[:, :L].astype(bool), nacc[:, 0], tok[:, 0]

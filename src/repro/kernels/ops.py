@@ -224,3 +224,38 @@ def residual_sample(p, q, u):
             out = ref.residual_sample_ref(p, q, u)
         sp.attach(out)
     return out
+
+
+def fused_verify_sample(target_logits, draft_tokens, draft_probs, q_idx,
+                        q_val, u_accept, u_resid, draft_len=None):
+    """Accept-test + prefix count + calibrated residual token, one dispatch.
+
+    Fuses ``gather_softmax_prob`` over every drafted position, the accept
+    test ``u < min(1, p_L/p_S)`` (masked to ``draft_len``), the prefix
+    acceptance count, and ``residual_sample`` at the first rejected position
+    with the sparse SLM row (q_idx, q_val) rebuilt tile-locally — the dense
+    (B, V) residual distribution never touches HBM on the Pallas path.
+
+    target_logits: (B, L+1, V); draft_tokens / draft_probs / u_accept:
+    (B, L); q_idx / q_val: (B, L, Vhat); u_resid: (B,); draft_len: (B,)
+    true lengths (defaults to L).  Uniforms are drawn by the caller so the
+    rng stream matches the unfused path exactly.
+
+    Returns ``(accept (B, L) bool, n_acc (B,) int32, calibrated (B,) int32)``.
+    """
+    B, L = draft_tokens.shape
+    if draft_len is None:
+        draft_len = jnp.full((B,), L, jnp.int32)
+    with _span("ops.fused_verify_sample", target_logits) as sp:
+        if _use_pallas():
+            from .fused_verify_sample import fused_verify_sample_pallas
+            out = fused_verify_sample_pallas(target_logits, draft_tokens,
+                                             draft_probs, q_idx, q_val,
+                                             u_accept, u_resid, draft_len,
+                                             interpret=_interpret())
+        else:
+            out = ref.fused_verify_sample_ref(target_logits, draft_tokens,
+                                              draft_probs, q_idx, q_val,
+                                              u_accept, u_resid, draft_len)
+        sp.attach(out[2])
+    return out

@@ -225,6 +225,64 @@ def residual_sample_ref(p: jax.Array, q: jax.Array, u: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Fused draft verification + calibrated sampling (paper eq. 4-5 in one op)
+# ---------------------------------------------------------------------------
+
+def _scatter_rows(out: jax.Array, idx: jax.Array, val: jax.Array) -> jax.Array:
+    """Scatter-add (B, Vhat) sparse rows into dense (B, V) rows."""
+    rows = jnp.arange(idx.shape[0])[:, None]
+    return out.at[rows, idx].add(val)
+
+
+def fused_verify_sample_ref(target_logits: jax.Array,   # (B, L+1, V)
+                            draft_tokens: jax.Array,    # (B, L) int32
+                            draft_probs: jax.Array,     # (B, L) p_S
+                            q_idx: jax.Array,           # (B, L, Vhat) int32
+                            q_val: jax.Array,           # (B, L, Vhat)
+                            u_accept: jax.Array,        # (B, L) uniforms
+                            u_resid: jax.Array,         # (B,) uniforms
+                            draft_len: jax.Array,       # (B,) true L_k <= L
+                            ):
+    """One-dispatch oracle for accept-test + residual sampling.
+
+    Composes ``gather_softmax_prob_ref`` (p_L of each drafted token), the
+    accept test ``u < min(1, p_L/p_S)`` masked to ``draft_len``, the
+    prefix-acceptance count, and ``residual_sample_ref`` at the first
+    rejected position (sparse SLM distribution scattered dense) — exactly
+    the math ``core.verification.verify_drafts`` used to run as separate
+    dispatches, with the uniforms drawn by the caller so the rng stream is
+    unchanged.
+
+    Returns ``(accept (B, L) bool, n_acc (B,) int32, calibrated (B,) int32)``.
+    The bonus token on full acceptance stays outside (it needs a categorical
+    sample, not a residual one).
+    """
+    B, L = draft_tokens.shape
+    V = target_logits.shape[-1]
+
+    flat_logits = target_logits[:, :L].reshape(B * L, V)
+    p_target = gather_softmax_prob_ref(
+        flat_logits, draft_tokens.reshape(B * L)).reshape(B, L)
+
+    ratio = p_target / jnp.maximum(draft_probs, 1e-30)
+    accept = u_accept < jnp.minimum(ratio, 1.0)
+    accept = accept & (jnp.arange(L)[None, :] < draft_len[:, None])
+    prefix_ok = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
+    n_acc = jnp.sum(prefix_ok, axis=-1)
+
+    sel = jnp.minimum(n_acc, L - 1)
+    logits_rej = jnp.take_along_axis(
+        target_logits, sel[:, None, None], axis=1)[:, 0]
+    p_rej = jax.nn.softmax(logits_rej.astype(jnp.float32), axis=-1)
+    idx_rej = jnp.take_along_axis(q_idx, sel[:, None, None], axis=1)[:, 0]
+    val_rej = jnp.take_along_axis(q_val, sel[:, None, None], axis=1)[:, 0]
+    q_rej = _scatter_rows(jnp.zeros((B, V), jnp.float32), idx_rej,
+                          val_rej.astype(jnp.float32))
+    calibrated = residual_sample_ref(p_rej, q_rej, u_resid)
+    return accept, n_acc.astype(jnp.int32), calibrated
+
+
+# ---------------------------------------------------------------------------
 # Mamba-2 SSD (state-space duality) chunked scan
 # ---------------------------------------------------------------------------
 

@@ -211,6 +211,53 @@ def paged_gather_kv(pool: jax.Array, page_table: jax.Array) -> jax.Array:
     return gathered.reshape((B, n_slots * ps) + pool.shape[2:])
 
 
+def gather_kv_window(leaf: jax.Array, pos: jax.Array,
+                     page_table: jax.Array | None = None) -> jax.Array:
+    """Gather K/V rows at logical positions ``pos`` (B, T) from a stacked
+    cache leaf: (Ln, B, S, KV, D) contiguous, or (Ln, P, ps, KV, D) pools
+    with ``page_table`` (B, n_slots).  Out-of-range / unmapped positions
+    clamp to a valid slot — callers mask by validity (the accepted prefix
+    of a live stream is always fully mapped).  Returns (Ln, B, T, KV, D)."""
+    if page_table is None:
+        S = leaf.shape[2]
+        idx = jnp.clip(pos, 0, S - 1)[None, :, :, None, None]
+        return jnp.take_along_axis(leaf, idx, axis=2)
+    P, ps = leaf.shape[1], leaf.shape[2]
+    n_slots = page_table.shape[1]
+    slot = jnp.clip(pos // ps, 0, n_slots - 1)
+    phys = jnp.take_along_axis(page_table, slot, axis=1)          # (B, T)
+    flat = jnp.maximum(phys, 0) * ps + pos % ps
+    flat_leaf = leaf.reshape(leaf.shape[:1] + (P * ps,) + leaf.shape[3:])
+    return flat_leaf[:, flat]
+
+
+def scatter_kv_window(leaf: jax.Array, values: jax.Array, pos: jax.Array,
+                      valid: jax.Array,
+                      page_table: jax.Array | None = None) -> jax.Array:
+    """Write ``values`` (Ln, B, T, KV, D) into a stacked cache leaf at
+    logical positions ``pos`` (B, T) where ``valid`` (B, T); invalid,
+    out-of-range, and unmapped positions are dropped (the same drop-bin
+    contract as ``paged_update_kv_cache``).  This is the K/V scatter-commit
+    primitive: the engine moves the accepted tree branch's already-computed
+    K/V into its committed slots instead of re-forwarding the path."""
+    values = values.astype(leaf.dtype)
+    if page_table is None:
+        S = leaf.shape[2]
+        idx = jnp.where(valid, pos, S)                            # S = drop
+        b = jnp.arange(leaf.shape[1])[:, None]
+        return leaf.at[:, b, idx].set(values, mode="drop")
+    P, ps = leaf.shape[1], leaf.shape[2]
+    n_slots = page_table.shape[1]
+    slot = pos // ps
+    phys = jnp.take_along_axis(page_table,
+                               jnp.clip(slot, 0, n_slots - 1), axis=1)
+    ok = valid & (phys >= 0) & (slot < n_slots)
+    flat = jnp.where(ok, phys * ps + pos % ps, P * ps)            # drop bin
+    flat_leaf = leaf.reshape(leaf.shape[:1] + (P * ps,) + leaf.shape[3:])
+    flat_leaf = flat_leaf.at[:, flat].set(values, mode="drop")
+    return flat_leaf.reshape(leaf.shape)
+
+
 def causal_mask(Sq: int, Skv: int, offset: int = 0) -> jax.Array:
     """(1, 1, 1, Sq, Skv) boolean mask: query i attends to kv j <= i+offset."""
     qi = jnp.arange(Sq)[:, None] + offset
@@ -243,36 +290,74 @@ def attention_apply(params: Params, x: jax.Array, *, num_heads: int,
                     mask: jax.Array | None, rope_theta: float | None,
                     kv_cache: tuple[jax.Array, jax.Array] | None = None,
                     cache_offset: jax.Array | int | None = None,
-                    page_table: jax.Array | None = None):
+                    page_table: jax.Array | None = None,
+                    window_mask: jax.Array | None = None,
+                    causal_window: bool = False):
     """Full attention layer. If kv_cache=(k_cache, v_cache) is given, new keys
     and values are written at ``cache_offset`` and attention runs over the
     whole cache (decode / chunked-prefill path). Returns (out, (k, v)) where
     (k, v) is the updated cache (or the fresh keys/values when no cache).
 
     With ``page_table`` (B, n_slots), ``kv_cache`` holds page POOLS
-    (P, ps, KV, D): writes route through the table and attention runs over
-    the gathered logical view — same numerics, paged layout."""
+    (P, ps, KV, D): writes route through the table.
+
+    Kernel dispatch (the serving hot path): when ``kernel_mode()`` is
+    ``pallas``/``interpret`` and the call is a cache window — sequential
+    (``causal_window=True``: query row t attends [0, cache_offset + t]) or
+    token-tree (``window_mask`` (B, T, T) ancestor-or-self, window written
+    at slots [cache_offset, cache_offset + T)) — attention runs through
+    ``ops.paged_attention`` / ``ops.tree_attention`` /
+    ``ops.paged_tree_attention`` directly on the cache layout.  On the
+    paged path this skips the per-layer ``paged_gather_kv``
+    materialization of the (B, n_slots * ps, KV, D) logical view entirely.
+    ``REPRO_KERNELS=ref`` (the CPU default) keeps the gather + masked
+    ``gqa_attention`` jnp path, which the kernel tests assert parity
+    against; callers always pass ``mask`` so the fallback never depends on
+    the dispatch flags."""
+    from repro.kernels import ops as kops
+
     B, S, _ = x.shape
     q, k, v = _project_qkv(params, x, num_heads, num_kv_heads, head_dim)
     if rope_theta is not None:
         q = apply_rope(q, positions, rope_theta)
         k = apply_rope(k, positions, rope_theta)
-    if kv_cache is not None:
-        k_cache, v_cache = kv_cache
-        if page_table is not None:
-            k_cache = paged_update_kv_cache(k_cache, k, cache_offset, page_table)
-            v_cache = paged_update_kv_cache(v_cache, v, cache_offset, page_table)
-            k = paged_gather_kv(k_cache, page_table)
-            v = paged_gather_kv(v_cache, page_table)
+    if kv_cache is None:
+        out = gqa_attention(q, k, v, mask)
+        out = out.reshape(B, S, num_heads * head_dim) @ params["wo"]
+        return out, (k, v)
+
+    k_cache, v_cache = kv_cache
+    dispatch = (kops.kernel_mode() in ("pallas", "interpret")
+                and (window_mask is not None or causal_window))
+    if page_table is not None:
+        k_cache = paged_update_kv_cache(k_cache, k, cache_offset, page_table)
+        v_cache = paged_update_kv_cache(v_cache, v, cache_offset, page_table)
+        if dispatch:
+            lengths = jnp.broadcast_to(jnp.asarray(cache_offset), (B,))
+            if window_mask is not None:
+                ctx = kops.paged_tree_attention(q, k_cache, v_cache,
+                                                page_table, lengths,
+                                                window_mask)
+            else:
+                ctx = kops.paged_attention(q, k_cache, v_cache, page_table,
+                                           lengths + 1)
         else:
-            k_cache = update_kv_cache(k_cache, k, cache_offset)
-            v_cache = update_kv_cache(v_cache, v, cache_offset)
-            k, v = k_cache, v_cache
-    out = gqa_attention(q, k, v, mask)
-    out = out.reshape(B, S, num_heads * head_dim) @ params["wo"]
-    if kv_cache is not None and page_table is not None:
-        return out, (k_cache, v_cache)      # pools, not the gathered view
-    return out, (k, v)
+            kg = paged_gather_kv(k_cache, page_table)
+            vg = paged_gather_kv(v_cache, page_table)
+            ctx = gqa_attention(q, kg, vg, mask)
+    else:
+        k_cache = update_kv_cache(k_cache, k, cache_offset)
+        v_cache = update_kv_cache(v_cache, v, cache_offset)
+        if dispatch and window_mask is not None:
+            lengths = jnp.broadcast_to(jnp.asarray(cache_offset), (B,))
+            ctx = kops.tree_attention(q, k_cache, v_cache, lengths,
+                                      window_mask)
+        else:
+            # contiguous sequential windows have no materialization to skip:
+            # the cache IS the attention operand, so the jnp path stays.
+            ctx = gqa_attention(q, k_cache, v_cache, mask)
+    out = ctx.reshape(B, S, num_heads * head_dim) @ params["wo"]
+    return out, (k_cache, v_cache)
 
 
 # ---------------------------------------------------------------------------

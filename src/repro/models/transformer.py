@@ -177,14 +177,15 @@ class DecoderLM:
 
     def _block_apply(self, p: Params, x, *, moe: bool, positions, mask,
                      kv_cache=None, offset=None, moe_capacity=None,
-                     page_table=None):
+                     page_table=None, window_mask=None, causal_window=False):
         cfg = self.cfg
         h = self.norm(p["ln_attn"], x)
         attn_out, kv = attention_apply(
             p["attn"], h, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
             head_dim=cfg.head_dim, positions=positions, mask=mask,
             rope_theta=cfg.rope_theta, kv_cache=kv_cache, cache_offset=offset,
-            page_table=page_table)
+            page_table=page_table, window_mask=window_mask,
+            causal_window=causal_window)
         x = x + attn_out
         h = self.norm(p["ln_mlp"], x)
         if moe:
@@ -195,7 +196,8 @@ class DecoderLM:
         return x + mlp_out, kv, aux
 
     def _stack_forward(self, params, x, positions, mask, cache=None, offset=None,
-                       moe_capacity=None):
+                       moe_capacity=None, window_mask=None,
+                       causal_window=False):
         """Run all blocks; returns (hidden, new_cache, aux_sum)."""
         cfg = self.cfg
         use_cache = cache is not None
@@ -209,7 +211,9 @@ class DecoderLM:
                                      positions=positions, mask=mask,
                                      kv_cache=kv_in, offset=offset,
                                      moe_capacity=moe_capacity,
-                                     page_table=page_table)
+                                     page_table=page_table,
+                                     window_mask=window_mask,
+                                     causal_window=causal_window)
 
         if cfg.remat:
             block_fn = jax.checkpoint(block_fn)
@@ -240,7 +244,8 @@ class DecoderLM:
                     kv_in = None
                 x, kv, aux = self._block_apply(
                     p, x, moe=False, positions=positions, mask=mask,
-                    kv_cache=kv_in, offset=offset, page_table=page_table)
+                    kv_cache=kv_in, offset=offset, page_table=page_table,
+                    window_mask=window_mask, causal_window=causal_window)
                 return x, (kv[0], kv[1], aux)
 
             xs = ((params["dense_blocks"], cache["dense_k"], cache["dense_v"])
@@ -306,9 +311,12 @@ class DecoderLM:
         kj = jnp.arange(S_max)[None, :]
         mask = (kj <= qi)[None, None, None]
         offset = jnp.zeros((), jnp.int32)
+        # prefill IS a sequential window at offset 0 (row t attends
+        # [0, t]), so the paged-attention kernel path applies
         x, cache, aux = self._stack_forward(params, x, positions, mask,
                                             cache=cache, offset=offset,
-                                            moe_capacity=moe_capacity)
+                                            moe_capacity=moe_capacity,
+                                            causal_window=True)
         return self._logits(params, x), cache, aux
 
     def forward_window(self, params, tokens, cache, pos, window_mask=None,
@@ -348,9 +356,14 @@ class DecoderLM:
         else:
             mask = tree_window_mask(pos, window_mask, S_max)
         moe_capacity = self.no_drop_capacity if self.moe_cfg else None
-        x, cache, _ = self._stack_forward(params, x, positions, mask,
-                                          cache=cache, offset=pos,
-                                          moe_capacity=moe_capacity)
+        # ``causal_window`` marks the standard sequential window (positions
+        # pos + t): a window_depth WITHOUT a window_mask would put rope
+        # positions out of step with the kernels' row-index mask, so it is
+        # excluded from kernel dispatch.
+        x, cache, _ = self._stack_forward(
+            params, x, positions, mask, cache=cache, offset=pos,
+            moe_capacity=moe_capacity, window_mask=window_mask,
+            causal_window=window_mask is None and window_depth is None)
         return self._logits(params, x), cache
 
     def num_params(self, params) -> int:

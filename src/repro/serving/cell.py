@@ -19,10 +19,9 @@ Construction is one ``CellConfig`` (JSON-serializable) and one call::
     rec = cell.step()          # one protocol round
     print(cell.summary())
 
-Unlike the legacy ``MultiSpinProtocol`` (removed after its one-PR
-migration window), the device list is never frozen: every round plans
-against the scheduler's CURRENT active set, so retirements, joins, and
-drops can never diverge from the controller's view.
+The device list is never frozen: every round plans against the
+scheduler's CURRENT active set, so retirements, joins, and drops can
+never diverge from the controller's view.
 """
 
 from __future__ import annotations
@@ -203,7 +202,18 @@ class CellConfig:
 
 class MultiSpinCell:
     """Session object running the Multi-SPIN protocol over a live request
-    set with a pluggable verification backend."""
+    set with a pluggable verification backend.
+
+    Each ``step()`` is one protocol round: assemble a ``CellObservation``
+    over the scheduler's current active set, let the configured scheme
+    plan it into a ``RoundPlan`` (draft lengths, bandwidth shares, draft
+    width J), execute the round through the backend, and fold the results
+    into the online acceptance estimator, channel state, and per-request
+    accounting.  ``submit``/``leave`` mutate the live set between rounds;
+    admission is gated by the backend's ``can_admit``.  Telemetry attaches
+    through ``add_listener`` (``on_admit``/``on_reject``/``on_round``)
+    without the cell importing it.  See docs/architecture.md for the full
+    request lifecycle."""
 
     def __init__(self, config: CellConfig,
                  backend: VerificationBackend | None = None,

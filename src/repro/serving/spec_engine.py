@@ -39,6 +39,7 @@ from repro.core.drafting import generate_draft_forest, generate_drafts
 from repro.core.token_tree import build_token_tree
 from repro.core.verification import verify_drafts, verify_tree
 from repro.models import build_model
+from repro.models.layers import gather_kv_window, scatter_kv_window
 from repro.obs import trace
 
 from .kv_cache import (
@@ -100,14 +101,41 @@ class RoundTicket:
 
 
 class SpecEngine:
+    """Speculative-decoding engine for B device streams: a small draft
+    model proposes tokens, a large target model batch-verifies them, and
+    both models' KV caches advance only over committed tokens.
+
+    ``spin_round`` is one protocol round.  ``draft_width`` J > 1 runs
+    token-TREE verification: J i.i.d. drafts per stream packed into a
+    prefix-deduplicated trie, scored in ONE ancestor-masked target pass,
+    with the longest accepted root-to-leaf path committed.  The row-subset
+    API (``draft_rows`` / ``verify_rows`` / ``commit_rows``) exposes the
+    same round as async pieces for continuous batching.
+
+    ``cache_kind``: ``"contiguous"`` fixes the batch at ``start()``;
+    ``"paged"`` serves churn from a pooled ``PagedKVCache`` (streams join
+    after start, retire, recycle rows).  Attention over either layout
+    dispatches through the Pallas kernel ops when ``REPRO_KERNELS`` selects
+    them (docs/kernels.md).
+
+    ``tree_commit``: how accepted tree branches reach the cache.
+    ``"scatter"`` (default) gathers the winning branch's K/V from the
+    already-written tree window and scatters it to contiguous positions —
+    no extra forward pass (span ``engine.kv_commit``); ``"repair"`` keeps
+    the reference re-forward over ``[pending, accepted path]`` (span
+    ``engine.cache_repair``).  Both commit identical tokens at the same
+    seed (tested, and asserted by ``bench_beyond --engine``)."""
+
     def __init__(self, target_cfg: ModelConfig, draft_cfg: ModelConfig,
                  max_len: int = 512, cache_dtype=jnp.float32,
                  cache_kind: str = "contiguous", page_size: int = 16,
-                 num_pages: int | None = None):
+                 num_pages: int | None = None, tree_commit: str = "scatter"):
         assert target_cfg.vocab_size == draft_cfg.vocab_size, \
             "SLM/LLM pair must share a vocabulary"
         if cache_kind not in CACHE_KINDS:
             raise ValueError(f"cache_kind must be one of {CACHE_KINDS}")
+        if tree_commit not in ("scatter", "repair"):
+            raise ValueError("tree_commit must be 'scatter' or 'repair'")
         if cache_kind == "paged" and (needs_state_rollback(target_cfg)
                                       or needs_state_rollback(draft_cfg)):
             raise NotImplementedError(
@@ -120,6 +148,7 @@ class SpecEngine:
         self.max_len = max_len
         self.cache_dtype = cache_dtype
         self.cache_kind = cache_kind
+        self.tree_commit = tree_commit
         self.page_size = int(page_size)
         self.pages_per_stream = -(-max_len // self.page_size)
         self.num_pages = num_pages
@@ -591,13 +620,16 @@ class SpecEngine:
 
         Cache discipline: the W+1 tree window (W = J * L) occupies target
         SLOTS [pos, pos + W] in construction order while each node keeps its
-        tree DEPTH as rope position; after acceptance the caches are
-        REPAIRED — one plain causal window over [pending, accepted path]
-        rewrites the surviving slots — and paged engines hand every page
-        past the accepted prefix (all dead branches) back to the pool.
-        At J = 1 the tree is a chain, the window IS the sequential window,
-        and the repair pass is skipped: tokens and caches are bit-identical
-        to ``spin_round``.
+        tree DEPTH as rope position; after acceptance the winning branch's
+        K/V are SCATTERED from their tree-window slots (target) and the
+        winning run's window snapshot (draft) into the committed slots —
+        ``tree_commit="repair"`` instead re-forwards [pending, accepted
+        path] through both models (the pre-scatter reference path; committed
+        tokens are identical either way, they are decided before the cache
+        fix-up).  Paged engines hand every page past the accepted prefix
+        (all dead branches) back to the pool.  At J = 1 the tree is a
+        chain, the window IS the sequential window, and no fix-up runs:
+        tokens and caches are bit-identical to ``spin_round``.
         """
         for role, cfg in (("target", self.target_cfg),
                           ("draft", self.draft_cfg)):
@@ -650,10 +682,12 @@ class SpecEngine:
             t_cache, d_cache = self.t_cache, self.d_cache
 
         # --- step 2: J drafting runs per stream (SLM) ---
+        scatter = self.tree_commit == "scatter" and J > 1
         with _span("engine.draft_forest", {"B": B, "L": L, "J": J}) as sp:
             forest = generate_draft_forest(self.draft, self.d_params, d_cache,
                                            state.pending, state.draft_pos,
-                                           L, J, k_draft, vhat=vhat)
+                                           L, J, k_draft, vhat=vhat,
+                                           keep_windows=scatter)
             sp.attach(forest.tokens)
         d_cache = forest.cache
 
@@ -687,10 +721,44 @@ class SpecEngine:
                               jnp.asarray(lengths, jnp.int32))
             sp.attach(res.accept_counts)
 
-        # --- step 5a: cache repair — rewrite the accepted path's K/V over
-        # the tree-ordered window slots (a J=1 chain already IS the
-        # sequential window: nothing to repair)
-        if J > 1:
+        # --- step 5a: land the accepted path's K/V (a J=1 chain already IS
+        # the sequential window: nothing to move)
+        frz = jnp.asarray(frz_np)
+        if scatter:
+            # scatter-commit: the ancestor-masked target pass ALREADY
+            # computed the accepted path's K/V (each tree node conditions on
+            # exactly its root-to-node path), so move the winning branch's
+            # rows from their tree-window slots into the committed slots —
+            # no repair forward, and no host sync on accept_counts
+            with _span("engine.kv_commit", {"B": B, "L": L, "J": J}) as sp:
+                path_w = jnp.take_along_axis(
+                    jnp.asarray(ttree.paths), res.winner[:, None, None],
+                    axis=1)[:, 0]                              # (B, L)
+                keep = ((jnp.arange(L)[None, :] < res.accept_counts[:, None])
+                        & (path_w >= 0) & ~frz[:, None])
+                col = jnp.arange(L, dtype=jnp.int32)[None, :]
+                src_t = state.target_pos[:, None] + 1 + jnp.maximum(path_w, 0)
+                dst_t = state.target_pos[:, None] + 1 + col
+                dst_d = state.draft_pos[:, None] + 1 + col
+                t_pt = t_cache.get("pages")
+                d_pt = d_cache.get("pages")
+                for leaf in ("k", "v", "dense_k", "dense_v"):
+                    if leaf in forest.windows:
+                        vals = gather_kv_window(t_cache[leaf], src_t,
+                                                page_table=t_pt)
+                        t_cache[leaf] = scatter_kv_window(
+                            t_cache[leaf], vals, dst_t, keep, page_table=t_pt)
+                        win = jnp.take_along_axis(
+                            forest.windows[leaf],
+                            res.winner[None, :, None, None, None, None],
+                            axis=2)[:, :, 0]                   # (Ln,B,L,KV,D)
+                        d_cache[leaf] = scatter_kv_window(
+                            d_cache[leaf], win, dst_d, keep, page_table=d_pt)
+                sp.attach(t_cache["k"])
+        elif J > 1:
+            # repair forward (kept as the reference path, and for targets
+            # whose window pass cannot donate K/V): one plain causal window
+            # over [pending, accepted path] rewrites the surviving slots
             n_max = int(np.asarray(res.accept_counts).max())
             repair = jnp.concatenate(
                 [state.pending[:, None], res.output_tokens[:, :n_max]],
@@ -707,7 +775,6 @@ class SpecEngine:
             if paged else d_cache
 
         # --- step 5b: commit + rollback (identical to the sequential round)
-        frz = jnp.asarray(frz_np)
         adv = jnp.where(frz, 0, 1 + res.accept_counts)
         new_target_pos = state.target_pos + adv
         new_draft_pos = state.draft_pos + adv

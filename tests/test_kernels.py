@@ -471,3 +471,154 @@ def test_quantized_kv_close_to_exact():
                                                lengths)
     err = np.abs(np.asarray(exact) - np.asarray(quant))
     assert err.max() < 0.05, err.max()
+
+
+# ---------------------------------------------------------------------------
+# fused verify + sample (accept test + residual fallback in one kernel)
+# ---------------------------------------------------------------------------
+
+def _fused_inputs(seed, B, L, V, vhat):
+    """Valid speculative-verification inputs: drafts actually drawn from the
+    uploaded truncated distribution, so acceptance rates are non-trivial."""
+    from repro.core.verification import truncate_renormalize
+
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    logits = jax.random.normal(ks[0], (B, L + 1, V)) * 2.0
+    q = jax.nn.softmax(jax.random.normal(ks[1], (B, L, V)) * 2.0, axis=-1)
+    idx, val = truncate_renormalize(q.reshape(B * L, V), vhat)
+    idx = idx.reshape(B, L, vhat)
+    val = val.reshape(B, L, vhat)
+    j = jax.random.categorical(ks[2], jnp.log(jnp.maximum(val, 1e-30)))
+    tokens = jnp.take_along_axis(idx, j[..., None], -1)[..., 0]
+    probs = jnp.take_along_axis(val, j[..., None], -1)[..., 0]
+    u_acc = jax.random.uniform(ks[3], (B, L))
+    u_res = jax.random.uniform(ks[4], (B,))
+    return logits, tokens, probs, idx, val, u_acc, u_res
+
+
+@pytest.mark.parametrize("B,L,V,vhat,bv", [
+    (2, 4, 512, 16, 256),
+    (3, 3, 1000, 32, 512),     # vocab not a tile multiple
+    (1, 6, 2048, 8, 2048),     # single row, whole vocab in one tile
+])
+@pytest.mark.parametrize("seed", [20, 21])
+def test_fused_verify_sample_matches_ref(B, L, V, vhat, bv, seed):
+    from repro.kernels.fused_verify_sample import fused_verify_sample_pallas
+
+    logits, toks, probs, idx, val, u_acc, u_res = _fused_inputs(
+        seed, B, L, V, vhat)
+    dlen = jnp.full((B,), L, jnp.int32)
+    got = fused_verify_sample_pallas(logits, toks, probs, idx, val, u_acc,
+                                     u_res, dlen, bv=bv, interpret=True)
+    want = ref.fused_verify_sample_ref(logits, toks, probs, idx, val, u_acc,
+                                       u_res, dlen)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_fused_verify_sample_ragged_draft_len():
+    """Rows past draft_len must not affect acceptance, and the calibrated
+    token must come from position min(n_acc, draft_len - 1)'s residual."""
+    from repro.kernels.fused_verify_sample import fused_verify_sample_pallas
+
+    B, L, V, vhat = 3, 5, 640, 16
+    logits, toks, probs, idx, val, u_acc, u_res = _fused_inputs(
+        22, B, L, V, vhat)
+    dlen = jnp.array([L, 2, 1], jnp.int32)
+    got = fused_verify_sample_pallas(logits, toks, probs, idx, val, u_acc,
+                                     u_res, dlen, bv=256, interpret=True)
+    want = ref.fused_verify_sample_ref(logits, toks, probs, idx, val, u_acc,
+                                       u_res, dlen)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    # no acceptances beyond each row's draft length
+    acc = np.asarray(got[0])
+    for b, n in enumerate([L, 2, 1]):
+        assert not acc[b, n:].any()
+
+
+def test_fused_verify_sample_ops_dispatch(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNELS", "interpret")
+    from repro.kernels import ops
+
+    logits, toks, probs, idx, val, u_acc, u_res = _fused_inputs(
+        23, 2, 4, 512, 16)
+    got = ops.fused_verify_sample(logits, toks, probs, idx, val, u_acc, u_res)
+    want = ref.fused_verify_sample_ref(
+        logits, toks, probs, idx, val, u_acc, u_res,
+        jnp.full((2,), 4, jnp.int32))
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+# ---------------------------------------------------------------------------
+# model-level attention dispatch (attention_apply kernel path vs jnp ref)
+# ---------------------------------------------------------------------------
+
+def _dispatch_model(seed=0):
+    from repro.configs.base import ModelConfig
+    from repro.models import build_model
+
+    cfg = ModelConfig(name="disp", family="dense", vocab_size=128,
+                      d_model=32, num_layers=2, num_heads=4, num_kv_heads=2,
+                      head_dim=8, d_ff=64)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(seed)), cfg
+
+
+def _tree_window(B, T=4):
+    """Branching window: parents (-1, 0, 0, 1) -> ancestor-or-self mask."""
+    parents = [-1, 0, 0, 1]
+    wm = np.zeros((T, T), bool)
+    depth = np.zeros((T,), np.int32)
+    for t in range(T):
+        a = t
+        while a >= 0:
+            wm[t, a] = True
+            a = parents[a]
+        p = parents[t]
+        depth[t] = 0 if p < 0 else depth[p] + 1
+    return (jnp.broadcast_to(jnp.asarray(wm), (B, T, T)),
+            jnp.broadcast_to(jnp.asarray(depth), (B, T)))
+
+
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("tree", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_attention_dispatch_matches_ref(paged, tree, dtype, monkeypatch):
+    """attention_apply's kernel dispatch (paged / tree / paged-tree and the
+    causal-window prefill) must agree with the jnp reference path on the
+    same cache layout."""
+    model, params, cfg = _dispatch_model()
+    B, M, T, ps = 2, 8, 4, 4
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, M), 0,
+                              cfg.vocab_size)
+    win = jax.random.randint(jax.random.PRNGKey(2), (B, T), 0,
+                             cfg.vocab_size)
+    wm, depth = _tree_window(B, T) if tree else (None, None)
+
+    def run(mode):
+        monkeypatch.setenv("REPRO_KERNELS", mode)
+        if paged:
+            n_slots = (M + T) // ps + 1
+            cache = model.init_paged_cache(B * n_slots, ps, dtype)
+            cache["pages"] = jnp.arange(B * n_slots, dtype=jnp.int32) \
+                .reshape(B, n_slots)
+        else:
+            cache = model.init_cache(B, M + T, dtype)
+        lp, cache, _ = model.prefill(params, toks, cache)
+        pos = jnp.full((B,), M, jnp.int32)
+        lw, cache = model.forward_window(params, win, cache, pos,
+                                         window_mask=wm, window_depth=depth)
+        return lp, lw, cache
+
+    ref_out = run("ref")
+    ker_out = run("interpret")
+    tol = _tol(dtype)
+    for g, w in zip(ker_out[:2], ref_out[:2]):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32), **tol)
+    for leaf in ("k", "v"):
+        np.testing.assert_allclose(
+            np.asarray(ker_out[2][leaf], np.float32),
+            np.asarray(ref_out[2][leaf], np.float32), **tol)

@@ -15,6 +15,11 @@ Coverage per the tree-attention issue:
   * the full cell serves ``multidraft`` on an ``EngineBackend`` with J >= 2
 """
 
+import os
+import subprocess
+import sys
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -26,7 +31,8 @@ from repro.core.verification import truncate_renormalize, verify_drafts, verify_
 from repro.serving import SpecEngine
 
 
-def _engine(max_len=96, paged=False, num_pages=None, self_draft=False):
+def _engine(max_len=96, paged=False, num_pages=None, self_draft=False,
+            tree_commit=None):
     tcfg = get_config("qwen2.5-3b").smoke()
     if self_draft:
         dcfg = tcfg.replace(name="draft-self")
@@ -43,6 +49,8 @@ def _engine(max_len=96, paged=False, num_pages=None, self_draft=False):
     kw = {}
     if paged:
         kw = {"cache_kind": "paged", "num_pages": num_pages or 96}
+    if tree_commit is not None:
+        kw["tree_commit"] = tree_commit
     eng = SpecEngine(tcfg, dcfg, max_len=max_len, **kw)
     eng.init_params(jax.random.PRNGKey(0))
     if self_draft:
@@ -309,3 +317,97 @@ def test_cell_multidraft_on_engine_backend():
     assert all(rec.draft_width >= 2 for rec in cell.history)
     eng.t_pages.check_invariants()
     eng.d_pages.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# engine: scatter-commit vs cache-repair forward
+# ---------------------------------------------------------------------------
+
+
+def _scatter_commit_parity(paged):
+    """Assert scatter-commit vs repair-forward parity (see the test below)."""
+    from repro.models.layers import gather_kv_window
+
+    def run(commit):
+        eng, tcfg = _engine(paged=paged, self_draft=True, tree_commit=commit)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0,
+                                     tcfg.vocab_size)
+        state = eng.start(prompts)
+        accepted = 0
+        for r in range(4):
+            state, res, _ = eng.spin_round(state, np.array([3, 3]),
+                                           jax.random.PRNGKey(100 + r),
+                                           vhat=16, draft_width=2)
+            accepted += int(np.asarray(res.accept_counts).sum())
+        return eng, state, accepted
+
+    eng_r, st_r, acc_r = run("repair")
+    eng_s, st_s, acc_s = run("scatter")
+    assert acc_r == acc_s
+    assert acc_r > 0, "test is vacuous without acceptances"
+    assert [list(c) for c in st_r.committed] == [list(c) for c in st_s.committed]
+    np.testing.assert_array_equal(np.asarray(st_r.target_pos),
+                                  np.asarray(st_s.target_pos))
+    # live cache slots (positions < fill level) must match; slots beyond the
+    # fill level are dead — repair rewrites them, scatter leaves stale tree
+    # rows, and causal masking means neither is ever read.
+    for eng, attr, pos in ((None, "t_cache", st_r.target_pos),
+                           (None, "d_cache", st_r.draft_pos)):
+        pos = np.asarray(pos)
+        grid = jnp.arange(int(pos.max()))[None, :].repeat(2, 0)
+        for er, es in ((eng_r, eng_s),):
+            cr, cs = getattr(er, attr), getattr(es, attr)
+            pages_r = pages_s = None
+            if paged:
+                pg = "t_pages" if attr == "t_cache" else "d_pages"
+                pages_r = jnp.asarray(getattr(er, pg).page_table(range(2)))
+                pages_s = jnp.asarray(getattr(es, pg).page_table(range(2)))
+                np.testing.assert_array_equal(np.asarray(pages_r),
+                                              np.asarray(pages_s))
+            for leaf in ("k", "v", "dense_k", "dense_v"):
+                if leaf not in cr:
+                    continue
+                wr = np.asarray(gather_kv_window(cr[leaf], grid, pages_r),
+                                np.float32)
+                ws = np.asarray(gather_kv_window(cs[leaf], grid, pages_s),
+                                np.float32)
+                live = (np.arange(grid.shape[1])[None, :]
+                        < pos[:, None])          # (B, S)
+                d = np.abs(wr - ws) * live[None, :, :, None, None]
+                assert d.max() < 1e-4, (attr, leaf, d.max())
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_engine_scatter_commit_matches_repair(paged):
+    """The default scatter-commit (winning branch's K/V scattered from the
+    tree window) must commit the SAME tokens as the repair-forward path and
+    leave the same live cache contents, round after round, at the same seed.
+
+    Self-draft with vhat << vocab gives a mix of acceptances and rejections,
+    so the scatter path (including dead-branch shadowing) is exercised.
+
+    Runs in a fresh subprocess: compiling the two extra self-draft engines
+    late in a long-lived pytest process segfaults the XLA CPU compiler
+    (accumulated compile state — jaxlib bug, reproducible in any mode), while
+    a clean process compiles and passes in under two minutes.
+    """
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(root / "src")] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    res = subprocess.run(
+        [sys.executable, str(Path(__file__).resolve()), "scatter-parity", "paged" if paged else "contiguous"],
+        env=env,
+        cwd=root,
+        capture_output=True,
+        text=True,
+        timeout=900,
+    )
+    assert res.returncode == 0, f"scatter-parity subprocess failed:\n{res.stdout}\n{res.stderr}"
+
+
+if __name__ == "__main__":
+    # subprocess entry point for test_engine_scatter_commit_matches_repair
+    assert sys.argv[1] == "scatter-parity"
+    _scatter_commit_parity(paged=sys.argv[2] == "paged")

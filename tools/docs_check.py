@@ -1,0 +1,96 @@
+"""Fail on broken relative links in the repo's markdown docs.
+
+Scans README.md and docs/**/*.md for markdown links, resolves every
+relative target (path plus optional ``#fragment``) against the linking
+file, and exits non-zero listing each target that does not exist.
+Fragments are checked against the target's headings (GitHub anchor
+slugs).  External links (``http(s)://``, ``mailto:``) are ignored — this
+gate is about repo-internal rot, not the network.
+
+Stdlib only.  Usage::
+
+    python tools/docs_check.py            # from the repo root
+    python tools/docs_check.py --root DIR
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _anchor(heading: str) -> str:
+    """GitHub's heading -> anchor slug (lowercase, drop punctuation,
+    spaces to dashes).  Inline code/emphasis markers are stripped."""
+    text = re.sub(r"[`*_]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(md_path: str) -> set:
+    with open(md_path, encoding="utf-8") as f:
+        body = CODE_FENCE_RE.sub("", f.read())
+    return {_anchor(m.group(1)) for m in HEADING_RE.finditer(body)}
+
+
+def _doc_files(root: str) -> list:
+    files = []
+    readme = os.path.join(root, "README.md")
+    if os.path.exists(readme):
+        files.append(readme)
+    docs = os.path.join(root, "docs")
+    for dirpath, _dirnames, filenames in os.walk(docs):
+        files += [os.path.join(dirpath, f) for f in sorted(filenames)
+                  if f.endswith(".md")]
+    return files
+
+
+def check(root: str) -> list:
+    """[(file, link, reason)] for every broken relative link."""
+    errors = []
+    for md in _doc_files(root):
+        with open(md, encoding="utf-8") as f:
+            body = CODE_FENCE_RE.sub("", f.read())
+        for link in LINK_RE.findall(body):
+            if link.startswith(("http://", "https://", "mailto:")):
+                continue
+            path, _, frag = link.partition("#")
+            target = (md if not path
+                      else os.path.normpath(
+                          os.path.join(os.path.dirname(md), path)))
+            rel = os.path.relpath(md, root)
+            if not os.path.exists(target):
+                errors.append((rel, link, "target does not exist"))
+                continue
+            if frag:
+                if not target.endswith(".md"):
+                    continue                    # only md fragments checkable
+                if _anchor(frag) not in _anchors(target):
+                    errors.append((rel, link, "missing anchor"))
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    default_root = os.path.normpath(
+        os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+    ap.add_argument("--root", default=default_root,
+                    help="repo root (default: this script's parent)")
+    args = ap.parse_args()
+    errors = check(args.root)
+    for fname, link, reason in errors:
+        print(f"BROKEN {fname}: ({link}) — {reason}")
+    n_files = len(_doc_files(args.root))
+    print(f"docs-check: {n_files} file(s) scanned, {len(errors)} broken "
+          f"link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
