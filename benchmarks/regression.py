@@ -39,7 +39,8 @@ from .common import read_rows_json
 
 REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
 BENCH_FILES = ("BENCH_kernels.json", "BENCH_churn.json",
-               "BENCH_gateway.json", "BENCH_continuous.json")
+               "BENCH_gateway.json", "BENCH_continuous.json",
+               "BENCH_roundpath.json")
 
 # metric -> (better, rel_tol, kind); ``better`` is the GOOD direction, a
 # relative move beyond rel_tol in the other direction is a regression.
@@ -70,8 +71,21 @@ METRICS = {
     # of the subsystem — a shrinking gain or growing TTFT ratio regresses it
     "goodput_gain": ("higher", 0.10, "quality"),
     "ttft_p95_ratio": ("lower", 0.15, "quality"),
+    # compiled round path (bench_roundpath): steady-state round time and
+    # the one-time warmup compile are host-dependent; the speedups are
+    # ratios on the same host so they ride the same gate
+    "us_per_round": ("lower", 0.60, "timing"),
+    "compile_s": ("lower", 1.50, "timing"),
+    "speedup_jit": ("higher", 0.50, "timing"),
+    "speedup_donate": ("higher", 0.50, "timing"),
     "completed": ("higher", 0.0, "structural"),
     "n_error": ("lower", 0.0, "structural"),
+    # compiled-path invariants: ONE host transfer per committed round, zero
+    # retraces after warmup, and a bounded traced-shape set — any movement
+    # is a structural regression, whatever the host
+    "n_host_syncs": ("lower", 0.0, "structural"),
+    "retraces": ("lower", 0.0, "structural"),
+    "step_shapes": ("lower", 0.0, "structural"),
     # forced-barrier bit-identity and the assembler's retrace bound are
     # hard invariants: any movement fails
     "bit_identical": ("higher", 0.0, "structural"),

@@ -34,6 +34,15 @@ class DraftResult:
     cache: object
 
 
+# pytree registration lets jitted round-step functions return a DraftResult
+# directly (serving/compiled.py) instead of unpacking to tuples at the jit
+# boundary; every field is array data, so there are no static fields
+jax.tree_util.register_dataclass(
+    DraftResult,
+    data_fields=["tokens", "probs", "q_idx", "q_val", "cache"],
+    meta_fields=[])
+
+
 @dataclasses.dataclass
 class DraftForest:
     """J i.i.d. drafting rounds per stream (the ``multidraft`` scheme's
@@ -55,6 +64,12 @@ class DraftForest:
     q_val: jax.Array
     cache: object
     windows: dict | None = None
+
+
+jax.tree_util.register_dataclass(
+    DraftForest,
+    data_fields=["tokens", "probs", "q_idx", "q_val", "cache", "windows"],
+    meta_fields=[])
 
 
 _KV_LEAVES = ("k", "v", "dense_k", "dense_v")

@@ -104,29 +104,55 @@ class TokenTreeBatch:
         return mask
 
 
-def build_token_tree(
-    tokens: np.ndarray,
-    probs: np.ndarray,
-    q_idx: np.ndarray,
-    q_val: np.ndarray,
-    lengths: np.ndarray,
-) -> TokenTreeBatch:
-    """Pack J drafts per row into prefix-deduplicated trees.
+class TreeScratch:
+    """Reusable host-side trie buffers for ``build_token_tree``.
 
-    tokens / probs: (B, J, L); q_idx / q_val: (B, J, L, Vhat);
-    lengths: (B,) true draft lengths (positions >= lengths_b are padding
-    and never become nodes).
+    Multi-draft rounds call the builder every round at a small set of
+    recurring (B, J, L) shapes (draft lengths are round-plan bucketed), so
+    instead of allocating 8 fresh arrays per call the engine hands the
+    builder one of these pools.  Buffers are keyed by the exact
+    (B, J, L, Vhat) shape and reset with a HIGH-WATER wipe: only the node
+    prefix actually written last round (and the path prefix up to the last
+    true draft length) is restored to the fill values, so sparse trees pay
+    proportional reset cost, never a full reallocation.
+
+    The returned ``TokenTreeBatch`` ALIASES the pool: it is valid until the
+    next ``build_token_tree`` call with the same scratch and shape.  The
+    engine uploads the trie to device within the same round, well before
+    the next build, so the aliasing is invisible there.
     """
-    tokens = np.asarray(tokens)
-    probs = np.asarray(probs)
-    q_idx = np.asarray(q_idx)
-    q_val = np.asarray(q_val)
-    lengths = np.asarray(lengths, dtype=np.int64)
-    B, J, L = tokens.shape
-    W = J * L
-    Vhat = q_idx.shape[-1]
 
-    out = TokenTreeBatch(
+    def __init__(self):
+        self._pool: dict[tuple, TokenTreeBatch] = {}
+        self._high_water: dict[tuple, tuple[int, int]] = {}
+
+    def acquire(self, B: int, J: int, L: int, Vhat: int) -> TokenTreeBatch:
+        key = (B, J, L, Vhat)
+        W = J * L
+        out = self._pool.get(key)
+        if out is None:
+            out = _fresh_tree_buffers(B, J, L, Vhat)
+            self._pool[key] = out
+            return out
+        hw_nodes, hw_len = self._high_water.get(key, (W, L))
+        out.tokens[:, :hw_nodes] = 0
+        out.parents[:, :hw_nodes] = DEAD
+        out.depth[:, :hw_nodes] = 0
+        out.probs[:, :hw_nodes] = 1.0
+        out.q_idx[:, :hw_nodes] = 0
+        out.q_val[:, :hw_nodes] = 0.0
+        out.paths[:, :, :hw_len] = -1
+        out.n_nodes[:] = 0
+        return out
+
+    def note(self, B: int, J: int, L: int, Vhat: int, used_nodes: int, used_len: int) -> None:
+        """Record how much of the pool the last build touched."""
+        self._high_water[(B, J, L, Vhat)] = (int(used_nodes), int(used_len))
+
+
+def _fresh_tree_buffers(B: int, J: int, L: int, Vhat: int) -> TokenTreeBatch:
+    W = J * L
+    return TokenTreeBatch(
         tokens=np.zeros((B, W), np.int32),
         parents=np.full((B, W), DEAD, np.int32),
         depth=np.zeros((B, W), np.int32),
@@ -136,6 +162,35 @@ def build_token_tree(
         paths=np.full((B, J, L), -1, np.int32),
         n_nodes=np.zeros(B, np.int32),
     )
+
+
+def build_token_tree(
+    tokens: np.ndarray,
+    probs: np.ndarray,
+    q_idx: np.ndarray,
+    q_val: np.ndarray,
+    lengths: np.ndarray,
+    scratch: TreeScratch | None = None,
+) -> TokenTreeBatch:
+    """Pack J drafts per row into prefix-deduplicated trees.
+
+    tokens / probs: (B, J, L); q_idx / q_val: (B, J, L, Vhat);
+    lengths: (B,) true draft lengths (positions >= lengths_b are padding
+    and never become nodes).  ``scratch`` reuses pooled buffers instead of
+    allocating — the result then aliases the pool (see ``TreeScratch``).
+    """
+    tokens = np.asarray(tokens)
+    probs = np.asarray(probs)
+    q_idx = np.asarray(q_idx)
+    q_val = np.asarray(q_val)
+    lengths = np.asarray(lengths, dtype=np.int64)
+    B, J, L = tokens.shape
+    Vhat = q_idx.shape[-1]
+
+    if scratch is not None:
+        out = scratch.acquire(B, J, L, Vhat)
+    else:
+        out = _fresh_tree_buffers(B, J, L, Vhat)
     for b in range(B):
         children: dict[tuple[int, int], int] = {}
         n = 0
@@ -158,4 +213,6 @@ def build_token_tree(
                 out.paths[b, j, pos] = node
                 parent = node
         out.n_nodes[b] = n
+    if scratch is not None:
+        scratch.note(B, J, L, Vhat, int(out.n_nodes.max(initial=0)), int(lengths.max(initial=0)))
     return out

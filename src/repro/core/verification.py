@@ -45,6 +45,15 @@ class VerifyResult:
     accept_mask: jax.Array
 
 
+# pytree registration: jitted round steps (serving/compiled.py) return a
+# VerifyResult straight through the jit boundary
+jax.tree_util.register_dataclass(
+    VerifyResult,
+    data_fields=["accept_counts", "output_tokens", "output_len",
+                 "accept_mask"],
+    meta_fields=[])
+
+
 @dataclasses.dataclass
 class TreeVerifyResult(VerifyResult):
     """Outcome of one batched TREE verification round (multi-draft).
@@ -58,6 +67,13 @@ class TreeVerifyResult(VerifyResult):
 
     winner: jax.Array = None        # (B,) int32 winning draft index
     node_valid: jax.Array = None    # (B, W) bool live-node mask
+
+
+jax.tree_util.register_dataclass(
+    TreeVerifyResult,
+    data_fields=["accept_counts", "output_tokens", "output_len",
+                 "accept_mask", "winner", "node_valid"],
+    meta_fields=[])
 
 
 def sparse_to_dense(idx: jax.Array, val: jax.Array, vocab: int) -> jax.Array:

@@ -56,12 +56,25 @@ def build_cell(args):
                                 num_kv_heads=1, head_dim=32, d_ff=128,
                                 vocab_size=tcfg.vocab_size, name="draft")
     engine = SpecEngine(tcfg, dcfg, max_len=args.max_len, cache_kind="paged",
-                        num_pages=args.max_batch * 2 * (args.max_len // 16))
+                        num_pages=args.max_batch * 2 * (args.max_len // 16),
+                        compile_mode=args.compile,
+                        compile_cache=args.compile_cache)
     engine.init_params(jax.random.PRNGKey(args.seed))
     prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
                                  (args.max_batch, 8), 0, tcfg.vocab_size)
-    backend = EngineBackend(engine, engine.start(prompts),
-                            keep_finished_tokens=True)
+    state = engine.start(prompts)
+    if args.compile != "eager":
+        # pre-trace the jitted round steps so the first live requests do not
+        # pay compiles; the cell dispatches full-batch rounds at the exact
+        # draft depth the scheme picks, so warm (max_batch, L) per length.
+        lengths = ([int(x) for x in args.warmup_lengths.split(",") if x]
+                   if args.warmup_lengths else [args.L_max])
+        state, info = engine.warmup(
+            state, sorted({(args.max_batch, L) for L in lengths}))
+        print(f"warmup: traced {len(info)} bucket(s) in "
+              f"{sum(info.values()):.1f}s "
+              f"(compile cache: {args.compile_cache or 'off'})")
+    backend = EngineBackend(engine, state, keep_finished_tokens=True)
     cfg = CellConfig(scheme=args.scheme, scheme_params=scheme_params,
                      schedule=args.schedule, max_batch=args.max_batch,
                      channel=ChannelConfig(vocab_size=tcfg.vocab_size),
@@ -133,6 +146,15 @@ def main():
                     help="shrink the engine arch to smoke scale")
     ap.add_argument("--max-len", type=int, default=256,
                     help="engine stream length ceiling")
+    ap.add_argument("--compile", default="eager",
+                    choices=("eager", "jit", "jit+donate"),
+                    help="engine round-path compile mode (engine backend)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent XLA compilation cache directory "
+                         "(also: REPRO_COMPILE_CACHE)")
+    ap.add_argument("--warmup-lengths", default="", metavar="L1,L2,...",
+                    help="draft depths to pre-trace at startup when "
+                         "--compile != eager (default: L-max only)")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--scheme", default="hete", choices=available_schemes())
     ap.add_argument("--scheme-arg", action="append", default=[],

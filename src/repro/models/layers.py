@@ -178,6 +178,14 @@ def paged_update_kv_cache(pool: jax.Array, new: jax.Array, offset,
     exactly the contract frozen/retired engine rows rely on (their stale
     window writes either land in slack slots that the row's next live round
     overwrites, or vanish).
+
+    Two other layers lean on the same drop semantics: the page allocator's
+    device table maps unknown streams to an all-(-1) row, and the engine's
+    ``warmup`` traces the jitted draft/verify steps against the REAL pools
+    under an all-(-1) table — every write drops, so the donated pool comes
+    back bit-identical and can be adopted.  Note the drop bin ``P * ps`` is
+    shared by every dropped write, so this scatter must NOT be annotated
+    ``unique_indices=True``.
     """
     B, T = new.shape[:2]
     P, ps = pool.shape[:2]

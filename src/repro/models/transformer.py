@@ -46,6 +46,18 @@ def _dtype(name: str):
             "float16": jnp.float16}[name]
 
 
+def strip_view(cache: Params) -> Params:
+    """Drop the ``"pages"`` page-table entry from a paged cache view,
+    leaving only the pool leaves.  The serving engine adopts the cache a
+    forward returns and must never retain the table inside a cache it later
+    passes to a DONATING jitted step: the page allocator's device mirror
+    owns the live table, and a stale copy riding in the cache would either
+    leak or alias a donated buffer.  No-op for contiguous caches."""
+    if "pages" not in cache:
+        return cache
+    return {k: v for k, v in cache.items() if k != "pages"}
+
+
 class DecoderLM:
     """Functional decoder-only LM parameterized by ``ModelConfig``."""
 
@@ -156,6 +168,8 @@ class DecoderLM:
         return cache
 
     CACHE_BATCH_AXES = {"k": 1, "v": 1, "dense_k": 1, "dense_v": 1}
+
+    strip_view = staticmethod(strip_view)
 
     @staticmethod
     def _cache_kv_capacity(cache: Params) -> int:

@@ -51,6 +51,7 @@ __all__ = [
     "Span",
     "Tracer",
     "active",
+    "incr",
     "install",
     "span",
     "tracing",
@@ -140,6 +141,10 @@ class Tracer:
         self._lock = threading.Lock()
         self.t0_ns = time.perf_counter_ns()
         self._block = None
+        # monotonically increasing named counters (host-transfer accounting:
+        # the engine bumps ``engine.host_sync`` at every blocking device
+        # fetch) — unbounded only in name count, which instrumentation fixes
+        self._counters: dict[str, int] = {}
 
     # -- span lifecycle (called by Span.__enter__/__exit__) --------------
 
@@ -181,11 +186,24 @@ class Tracer:
              args: dict | None = None) -> Span:
         return Span(self, name, cat, args)
 
+    def incr(self, name: str, n: int = 1) -> None:
+        """Bump a named counter (thread-safe).  Counters ride the tracer so
+        host-transfer accounting is free when tracing is off — the module
+        level ``incr`` is a no-op without an installed tracer."""
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0) + int(n)
+
+    def counters(self) -> dict[str, int]:
+        """Snapshot of the named counters."""
+        with self._lock:
+            return dict(self._counters)
+
     def clear(self):
         with self._lock:
             self.spans.clear()
             self.dropped = 0
             self.t0_ns = time.perf_counter_ns()
+            self._counters.clear()
 
     def snapshot(self) -> list[Span]:
         """Finished spans, oldest first (thread-safe copy)."""
@@ -237,7 +255,8 @@ class Tracer:
         return {
             "traceEvents": events,
             "displayTimeUnit": "ms",
-            "otherData": {"dropped_spans": self.dropped},
+            "otherData": {"dropped_spans": self.dropped,
+                          "counters": self.counters()},
         }
 
     def export_chrome_trace_json(self, **kw) -> str:
@@ -281,6 +300,14 @@ def span(name: str, cat: str = "repro", args: dict | None = None):
     if t is None:
         return NULL_SPAN
     return t.span(name, cat=cat, args=args)
+
+
+def incr(name: str, n: int = 1) -> None:
+    """Bump a named counter on the installed tracer; free no-op when tracing
+    is off (one global read, no allocation)."""
+    t = _tracer
+    if t is not None:
+        t.incr(name, n)
 
 
 class tracing:

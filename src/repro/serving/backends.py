@@ -117,6 +117,9 @@ class EngineBackend:
         self._prompt_len_of: dict[int, int] = {}
         self._start_rows = int(state.pending.shape[0])
         self._next_start_row = 0
+        # host-transfer accounting: engine.host_syncs delta across the last
+        # verify/collect call (RoundRecord.n_host_syncs picks this up)
+        self.last_round_host_syncs: int | None = None
 
     @property
     def batch_size(self) -> int:
@@ -266,11 +269,20 @@ class EngineBackend:
         args = None if trace.active() is None else {
             "B": B, "K": len(rows), "L_max": int(lengths.max()),
             "J": int(draft_width)}
+        h0 = int(getattr(self.engine, "host_syncs", 0))
         with trace.span("engine.verify", cat="engine", args=args) as sp:
             self.state, res, _ = self.engine.spin_round(
                 self.state, full, key, vhat=self.vhat, freeze=freeze,
                 draft_width=int(draft_width))
             sp.attach(res.output_len)
+        self.last_round_host_syncs = \
+            int(getattr(self.engine, "host_syncs", 0)) - h0
+        # the commit's packed emission already landed the accepted counts on
+        # host (0 for frozen rows — both cell schedules zero masked entries
+        # anyway), so reading them here costs no extra device fetch
+        accepted = getattr(self.engine, "last_accepted", None)
+        if accepted is not None and len(accepted) == B:
+            return np.asarray(accepted, dtype=np.int64)[rows]
         return np.asarray(res.output_len, dtype=np.int64)[rows]
 
 
@@ -338,7 +350,11 @@ class ContinuousBackend(EngineBackend):
 
     def collect(self, handle) -> np.ndarray:
         """Land an in-flight batch (host sync + commit + page reclaim)."""
-        return np.asarray(self.cont.commit(handle), dtype=np.int64)
+        h0 = int(getattr(self.engine, "host_syncs", 0))
+        out = np.asarray(self.cont.commit(handle), dtype=np.int64)
+        self.last_round_host_syncs = \
+            int(getattr(self.engine, "host_syncs", 0)) - h0
+        return out
 
     def verify(self, lengths: np.ndarray, requests: Sequence,
                rng: np.random.Generator, key=None,

@@ -88,6 +88,10 @@ class RoundRecord:
     # continuous schedule only: streams drafted-and-waiting when this batch
     # dispatched (depth of the READY queue the assembler packs from)
     ready_depth: int | None = None
+    # blocking device->host fetches the engine performed landing this round
+    # (the compiled round path commits with exactly ONE — the packed token
+    # emission); None for backends without host-transfer accounting
+    n_host_syncs: int | None = None
 
 
 @dataclasses.dataclass
@@ -515,6 +519,12 @@ class MultiSpinCell:
         ps = getattr(self.backend, "pool_stats", None)
         return ps() if callable(ps) else None
 
+    def _host_syncs(self) -> int | None:
+        """Blocking device->host fetches the backend's engine performed for
+        the round just landed; None without host-transfer accounting."""
+        v = getattr(self.backend, "last_round_host_syncs", None)
+        return int(v) if v is not None else None
+
     def _verify(self, plan, lengths, requests, key, mask) -> np.ndarray:
         """Backend verification call; the multi-draft width J rides along
         only when the plan asks for it (custom single-draft backends keep
@@ -573,6 +583,7 @@ class MultiSpinCell:
         self._round_idx += 1
         self._retire(active_reqs, accepted, t_round)
         rec.pool_stats = self._pool_stats()
+        rec.n_host_syncs = self._host_syncs()
         self._emit("on_round", rec)
         return rec
 
@@ -659,6 +670,7 @@ class MultiSpinCell:
         self._retire(active_reqs, accepted, step_time,
                      participated=participated)
         rec.pool_stats = self._pool_stats()
+        rec.n_host_syncs = self._host_syncs()
         self._emit("on_round", rec)
         return rec
 
@@ -808,6 +820,7 @@ class MultiSpinCell:
         self._retire(active_reqs, accepted, float(t_round),
                      participated=participated)
         rec.pool_stats = self._pool_stats()
+        rec.n_host_syncs = self._host_syncs()
         self._emit("on_round", rec)
         return rec
 

@@ -1,0 +1,169 @@
+"""Compiled round path: jitted draft/verify/commit step functions.
+
+The engine's three row-subset round steps (``draft_rows`` / ``verify_rows``
+/ ``commit_rows``) bottom out in the pure step functions built here.  Each
+step takes the model params, the KV-cache pytree, the (non-donated) page
+table and the stream-state arrays as ARGUMENTS — nothing round-varying is
+closure-captured — so ``jax.jit`` can alias the donated buffers:
+
+  * ``draft_step``  — donates the DRAFT KV cache (argnum 1)
+  * ``verify_step`` — donates the TARGET KV cache (argnum 1)
+  * ``commit_step`` — donates pending / target_pos / draft_pos (0, 1, 2)
+
+Donation invariants (docs/architecture.md "compilation & memory model"):
+
+  * a donated buffer is DEAD after the call — the engine adopts the
+    returned cache/state pytree and must never re-read the old reference;
+  * the page-table array is never donated: the allocator's persistent
+    device mirror (``PagedKVCache.device_table``) keeps a live reference
+    across rounds;
+  * step functions strip the ``"pages"`` entry from the cache they return,
+    so a stale page table can never ride along inside an adopted cache.
+
+Shapes are keyed at the same pow2 (batch, length) buckets the continuous
+engine's ``BatchAssembler`` emits, which bounds retraces; the ``record``
+hook fires only at TRACE time (python inside a jitted body), mirroring the
+``prefill_shapes`` / ``BatchAssembler.shapes`` accounting idiom, so tests
+can assert the retrace count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.drafting import generate_drafts
+from repro.core.verification import verify_drafts
+from repro.models.transformer import strip_view
+
+COMPILE_MODES = ("eager", "jit", "jit+donate")
+
+
+def setup_compilation_cache(cache_dir: str | None = None) -> str | None:
+    """Enable JAX's persistent compilation cache at ``cache_dir``.
+
+    Falls back to the ``REPRO_COMPILE_CACHE`` env var when ``cache_dir`` is
+    None; returns the directory actually installed (or None when disabled).
+    Cold gateway starts recompile the full round path (~minutes at real
+    shapes); with the cache installed a restart at the same shapes loads
+    the compiled executables from disk instead.
+    """
+    cache_dir = cache_dir or os.environ.get("REPRO_COMPILE_CACHE")
+    if not cache_dir:
+        return None
+    cache_dir = os.path.abspath(os.path.expanduser(str(cache_dir)))
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    # default thresholds skip small/fast compiles; serving wants every
+    # round-step executable persisted so warm restarts pay zero compiles
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    try:
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    except (AttributeError, ValueError):  # older jax spells it differently
+        pass
+    return cache_dir
+
+
+def commit_step(pending: jax.Array, target_pos: jax.Array,
+                draft_pos: jax.Array, rows: jax.Array, skip: jax.Array,
+                output_tokens: jax.Array, accept_counts: jax.Array):
+    """Row-subset commit, entirely on device.
+
+    rows: (n,) int32 state-row index per ticket slot, ``-1`` = padding.
+    skip: (n,) bool — padding / frozen / retired slots commit nothing.
+    output_tokens: (n, L+1); accept_counts: (n,).
+
+    Updates ONLY the affected rows of the (B,) state arrays — padding maps
+    to row 0 with a zero delta, and because integer scatter-add of zeros is
+    exact, duplicated padding rows are harmless (live rows are distinct by
+    the engine's one-live-ticket-per-row invariant).  Returns the new state
+    arrays plus a packed ``(n, L+2)`` int32 emission —
+    ``[advance, output_tokens...]`` per slot — which is the ONE device->host
+    fetch the engine performs per round.
+    """
+    safe = jnp.where(rows < 0, 0, rows)
+    k = accept_counts.astype(jnp.int32)
+    adv = jnp.where(skip, 0, k + 1).astype(jnp.int32)
+    new_tok = jnp.take_along_axis(output_tokens, k[:, None], axis=1)[:, 0]
+    old = jnp.take(pending, safe)
+    delta = jnp.where(skip, 0, new_tok.astype(pending.dtype) - old)
+    pending = pending.at[safe].add(delta)
+    target_pos = target_pos.at[safe].add(adv)
+    draft_pos = draft_pos.at[safe].add(adv)
+    emission = jnp.concatenate(
+        [adv[:, None], output_tokens.astype(jnp.int32)], axis=1)
+    return pending, target_pos, draft_pos, emission
+
+
+@dataclasses.dataclass
+class RoundSteps:
+    """The three compiled (or eager) step callables for one engine.
+
+    ``draft`` / ``verify`` are None in eager mode — the engine keeps its
+    op-by-op dispatch path; ``commit`` is always callable (the eager path
+    shares the same device-side commit math, just unjitted).
+    """
+
+    mode: str
+    draft: Callable | None
+    verify: Callable | None
+    commit: Callable
+
+
+def build_round_steps(target_model, draft_model, *, mode: str,
+                      record: Callable[[tuple], None] | None = None,
+                      ) -> RoundSteps:
+    """Build the round-step callables for a (target, draft) model pair.
+
+    ``record`` is invoked with a ``(step, B, L)`` shape key inside each
+    function body — under ``jit`` that python runs at trace time only, so
+    the callback counts RETRACES, not calls.
+    """
+    if mode not in COMPILE_MODES:
+        raise ValueError(f"compile_mode must be one of {COMPILE_MODES}, "
+                         f"got {mode!r}")
+    donate = mode == "jit+donate"
+
+    def _record(kind: str, n: int, L: int):
+        if record is not None:
+            record((kind, n, L))
+
+    def draft_step(params, kv, pages, pending, dpos, key, *, L, vhat):
+        _record("draft", pending.shape[0], L)
+        cache = kv if pages is None else dict(kv, pages=pages)
+        res = generate_drafts(draft_model, params, cache, pending, dpos,
+                              L, key, vhat=vhat)
+        return dataclasses.replace(res, cache=strip_view(res.cache))
+
+    def verify_step(params, kv, pages, pending, tokens, probs, q_idx,
+                    q_val, tpos, draft_len, key):
+        _record("verify", tokens.shape[0], tokens.shape[1])
+        cache = kv if pages is None else dict(kv, pages=pages)
+        window = jnp.concatenate([pending[:, None], tokens], axis=1)
+        logits, cache = target_model.forward_window(params, window, cache,
+                                                    tpos)
+        res = verify_drafts(key, tokens, probs, logits, q_idx=q_idx,
+                            q_val=q_val, draft_len=draft_len)
+        return res, strip_view(cache)
+
+    def commit(pending, target_pos, draft_pos, rows, skip, output_tokens,
+               accept_counts):
+        _record("commit", rows.shape[0], output_tokens.shape[1] - 1)
+        return commit_step(pending, target_pos, draft_pos, rows, skip,
+                           output_tokens, accept_counts)
+
+    if mode == "eager":
+        return RoundSteps(mode=mode, draft=None, verify=None,
+                          commit=commit_step)
+    return RoundSteps(
+        mode=mode,
+        draft=jax.jit(draft_step, static_argnames=("L", "vhat"),
+                      donate_argnums=(1,) if donate else ()),
+        verify=jax.jit(verify_step,
+                       donate_argnums=(1,) if donate else ()),
+        commit=jax.jit(commit, donate_argnums=(0, 1, 2) if donate else ()),
+    )

@@ -232,6 +232,20 @@ class ContinuousEngine:
         self._ready: dict[int, tuple] = {}
         self.commits: list[CommitEvent] = []
 
+    def warmup(self, batch_sizes, lengths) -> dict:
+        """Pre-compile the engine's jitted round steps at every
+        (batch, length) bucket this driver's ``BatchAssembler`` would emit
+        for the given populations.  Cold starts otherwise pay one XLA
+        trace+compile per bucket MID-ROUND; no-op on eager engines.
+        Adopts the engine's returned state (jit+donate commits donate the
+        state arrays)."""
+        buckets = {(self.assembler.batch_bucket(int(b)),
+                    self.assembler.length_bucket(int(L)))
+                   for b in batch_sizes for L in lengths}
+        self.state, info = self.engine.warmup(self.state, sorted(buckets),
+                                              vhat=self.vhat)
+        return info
+
     # -- stream lifecycle ----------------------------------------------
 
     def add_stream(self, row: int, length: int = 4,

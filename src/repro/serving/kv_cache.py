@@ -104,6 +104,14 @@ class PagedKVCache:
         self._free: list[int] = list(range(num_pages - 1, -1, -1))
         self._tables: dict[int, list[int]] = {}   # stream -> physical pages
         self._lengths: dict[int, int] = {}        # stream -> valid token count
+        # device-side page-table mirror: (rows, pages_per_stream) int32 on
+        # device, flushed incrementally — mutations mark their row dirty and
+        # ``device_table`` uploads ONLY the dirty rows (one explicit
+        # device_put + scatter per flush) instead of re-uploading the whole
+        # table several times per round
+        self._dev = None                          # jax.Array | None
+        self._dev_rows = 0                        # row capacity of _dev
+        self._dirty: set[int] = set()
 
     # -- capacity queries ----------------------------------------------------
 
@@ -159,6 +167,8 @@ class PagedKVCache:
                 f"{len(self._free)} free of {self.num_pages}")
         for _ in range(max(grow, 0)):
             table.append(self._free.pop())
+        if grow > 0:
+            self._dirty.add(int(stream))
         self._lengths[stream] = max(self._lengths[stream], int(new_length))
 
     def truncate(self, stream: int, new_length: int) -> int:
@@ -171,6 +181,8 @@ class PagedKVCache:
         while len(table) > keep:
             self._free.append(table.pop())
             freed += 1
+        if freed > 0:
+            self._dirty.add(int(stream))
         self._lengths[stream] = int(new_length)
         return freed
 
@@ -179,6 +191,8 @@ class PagedKVCache:
         table = self._tables.pop(stream)
         self._lengths.pop(stream)
         self._free.extend(reversed(table))
+        if table:
+            self._dirty.add(int(stream))
         return len(table)
 
     # -- views ---------------------------------------------------------------
@@ -198,6 +212,50 @@ class PagedKVCache:
             pages = self._tables.get(s, ())
             out[i, :len(pages)] = pages
         return out
+
+    def device_table(self, streams) -> "jax.Array":
+        """Device-resident page table for ``streams``, maintained
+        incrementally.
+
+        A persistent ``(rows, pages_per_stream)`` int32 mirror lives on
+        device; each call flushes the rows dirtied since the last flush with
+        ONE explicit ``jax.device_put`` + row scatter, then gathers the
+        requested rows on device.  This replaces the per-call host rebuild +
+        full re-upload of ``page_table(streams)`` on the round hot path —
+        every transfer here is explicit, so dispatch stays legal under
+        ``jax.transfer_guard("disallow")``.
+
+        ``streams`` may contain ``-1`` padding entries (and rows the mirror
+        has never seen): they gather as all--1 rows — cache writes dropped,
+        reads masked — exactly like ``page_table``.
+        """
+        hi = max((int(s) for s in streams if int(s) >= 0), default=-1)
+        hi = max(hi, max(self._tables, default=-1))
+        need_rows = hi + 1
+        if self._dev is None or need_rows > self._dev_rows:
+            # (re)build the whole mirror at a doubled row capacity — rare
+            # (stream population growth), and O(rows) like one host rebuild
+            cap = max(8, self._dev_rows)
+            while cap < need_rows:
+                cap *= 2
+            full = self.page_table(range(cap))
+            self._dev = jax.device_put(full)
+            self._dev_rows = cap
+            self._dirty.clear()
+        elif self._dirty:
+            rows = sorted(r for r in self._dirty if r < self._dev_rows)
+            if rows:
+                vals = jax.device_put(self.page_table(rows))
+                idx = jax.device_put(np.asarray(rows, np.int32))
+                self._dev = self._dev.at[idx].set(vals)
+            self._dirty.clear()
+        # -1 padding / unknown rows -> out-of-bounds under mode="fill" so
+        # they gather the all--1 sentinel row
+        sel = np.asarray([int(s) if 0 <= int(s) < self._dev_rows
+                          else self._dev_rows for s in streams], np.int32)
+        sel_dev = jax.device_put(sel)
+        return jnp.take(self._dev, sel_dev, axis=0, mode="fill",
+                        fill_value=-1)
 
     def check_invariants(self) -> None:
         """Every page is either free or mapped exactly once (leak/double-free

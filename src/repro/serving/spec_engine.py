@@ -29,6 +29,8 @@ channel/latency model to produce goodput numbers.
 from __future__ import annotations
 
 import dataclasses
+import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -36,12 +38,18 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.drafting import generate_draft_forest, generate_drafts
-from repro.core.token_tree import build_token_tree
+from repro.core.token_tree import TreeScratch, build_token_tree
 from repro.core.verification import verify_drafts, verify_tree
 from repro.models import build_model
 from repro.models.layers import gather_kv_window, scatter_kv_window
+from repro.models.transformer import strip_view
 from repro.obs import trace
 
+from .compiled import (
+    COMPILE_MODES,
+    build_round_steps,
+    setup_compilation_cache,
+)
 from .kv_cache import (
     PagedKVCache,
     PagePoolExhausted,
@@ -129,7 +137,9 @@ class SpecEngine:
     def __init__(self, target_cfg: ModelConfig, draft_cfg: ModelConfig,
                  max_len: int = 512, cache_dtype=jnp.float32,
                  cache_kind: str = "contiguous", page_size: int = 16,
-                 num_pages: int | None = None, tree_commit: str = "scatter"):
+                 num_pages: int | None = None, tree_commit: str = "scatter",
+                 compile_mode: str | None = None,
+                 compile_cache: str | None = None):
         assert target_cfg.vocab_size == draft_cfg.vocab_size, \
             "SLM/LLM pair must share a vocabulary"
         if cache_kind not in CACHE_KINDS:
@@ -141,6 +151,17 @@ class SpecEngine:
             raise NotImplementedError(
                 "paged caches cover attention KV only; SSM/hybrid recurrent "
                 "state is O(1) per stream and needs no paging (ROADMAP)")
+        if compile_mode is None:
+            compile_mode = os.environ.get("REPRO_COMPILE", "eager")
+        if compile_mode not in COMPILE_MODES:
+            raise ValueError(f"compile_mode must be one of {COMPILE_MODES}, "
+                             f"got {compile_mode!r}")
+        if compile_mode != "eager" and (needs_state_rollback(target_cfg)
+                                        or needs_state_rollback(draft_cfg)):
+            raise NotImplementedError(
+                "compiled round steps cover attention models; SSM/hybrid "
+                "snapshot rollback re-enters python between the target pass "
+                "and the cache merge (ROADMAP open items)")
         self.target_cfg = target_cfg
         self.draft_cfg = draft_cfg
         self.target = build_model(target_cfg)
@@ -162,6 +183,41 @@ class SpecEngine:
         # (one XLA trace per distinct shape); tests hook ``on_prefill_trace``
         self.prefill_shapes: set[tuple[int, int]] = set()
         self.on_prefill_trace = None
+        # compiled round path: jitted draft/verify/commit step functions
+        # (serving/compiled.py).  ``step_shapes`` collects every (step, B, L)
+        # actually TRACED — the hook fires from inside the jitted bodies, so
+        # it counts retraces, not calls; ``warmup()`` pre-seeds the buckets.
+        self.compile_mode = compile_mode
+        if compile_mode != "eager":
+            setup_compilation_cache(compile_cache)
+        self.step_shapes: set[tuple] = set()
+        self.on_step_trace = None
+        self._steps = build_round_steps(self.target, self.draft,
+                                        mode=compile_mode,
+                                        record=self._record_step)
+        # host-transfer accounting: every blocking device->host fetch on the
+        # round path funnels through ``_host_fetch`` and bumps this
+        self.host_syncs = 0
+        # host-side accepted counts of the last FULL-BATCH commit (the
+        # lockstep backend reads these instead of re-fetching output_len);
+        # None after row-subset commits, whose alignment is ticket-local
+        self.last_accepted: np.ndarray | None = None
+        self._tree_scratch = TreeScratch()
+
+    def _record_step(self, shape: tuple) -> None:
+        self.step_shapes.add(shape)
+        if self.on_step_trace is not None:
+            self.on_step_trace(shape)
+
+    def _host_fetch(self, value):
+        """Blocking device->host fetch.  The ONE per-round call site is the
+        packed commit emission in ``commit_rows``; tree rounds add the
+        host-side trie build and (repair mode) the accepted-depth fetch.
+        Counting every fetch here keeps ``RoundRecord.n_host_syncs``
+        honest."""
+        self.host_syncs += 1
+        trace.incr("engine.host_sync")
+        return jax.device_get(value)
 
     # ------------------------------------------------------------------
 
@@ -299,16 +355,14 @@ class SpecEngine:
         self.prefill_shapes.add((n, Mb))
         if self.on_prefill_trace is not None:
             self.on_prefill_trace((n, Mb))
-        t_view = dict(self.t_cache,
-                      pages=jnp.asarray(self.t_pages.page_table(rows)))
-        d_view = dict(self.d_cache,
-                      pages=jnp.asarray(self.d_pages.page_table(rows)))
+        t_view = dict(self.t_cache, pages=self.t_pages.device_table(rows))
+        d_view = dict(self.d_cache, pages=self.d_pages.device_table(rows))
         _, t_view, _ = self.target.prefill(self.t_params, padded[:, :-1],
                                            t_view)
         _, d_view, _ = self.draft.prefill(self.d_params, padded[:, :-1],
                                           d_view)
-        self.t_cache = {k: v for k, v in t_view.items() if k != "pages"}
-        self.d_cache = {k: v for k, v in d_view.items() if k != "pages"}
+        self.t_cache = strip_view(t_view)
+        self.d_cache = strip_view(d_view)
         if Mb > M:
             # hand the bucket-padding pages straight back to the pool
             for row in rows:
@@ -350,12 +404,79 @@ class SpecEngine:
         self._free_rows.sort()
 
     # ------------------------------------------------------------------
+    # compiled-path warmup
+    # ------------------------------------------------------------------
+
+    def warmup(self, state: StreamState, buckets, vhat: int = 64):
+        """Pre-compile the jitted round steps at the given (B, L) buckets.
+
+        Call after ``start()``.  Each bucket runs one draft + verify +
+        commit step with dummy inputs at EXACTLY the shapes/dtypes the real
+        dispatch uses, so serving never pays a trace+compile mid-round
+        (gateway cold starts measured ~minutes at real shapes in PR 1);
+        with ``setup_compilation_cache`` installed the executables also
+        persist across process restarts.  Returns ``(state, info)`` where
+        ``info`` maps each bucket to its warmup seconds — callers MUST
+        adopt the returned state: in ``jit+donate`` mode the commit warmup
+        donates the state arrays (it is a no-op commit: every slot skipped,
+        values unchanged).
+
+        Paged engines warm against the REAL pools under an all--1 page
+        table — window writes are dropped, so the donated pool comes back
+        bit-identical and is adopted.  Contiguous engines allocate a
+        throwaway zero cache per bucket (their forwards need the cache
+        batch axis to match the bucket) and only make sense at the full
+        batch size.  No-op in eager mode.
+        """
+        if self._steps.draft is None:
+            return state, {}
+        paged = self.cache_kind == "paged"
+        info: dict[tuple[int, int], float] = {}
+        key = jax.random.PRNGKey(0)
+        for n, L in sorted({(int(n), int(L)) for n, L in buckets}):
+            t0 = time.perf_counter()
+            pending = jnp.zeros((n,), state.pending.dtype)
+            pos = jnp.zeros((n,), jnp.int32)
+            if paged:
+                blank_pt = jax.device_put(
+                    np.full((n, self.pages_per_stream), -1, np.int32))
+                d_kv, t_kv = self.d_cache, self.t_cache
+            else:
+                blank_pt = None
+                d_kv = self.draft.init_cache(n, self.max_len,
+                                             self.cache_dtype)
+                t_kv = self.target.init_cache(n, self.max_len,
+                                              self.cache_dtype)
+            dres = self._steps.draft(self.d_params, d_kv, blank_pt, pending,
+                                     pos, key, L=L, vhat=vhat)
+            if paged:
+                self.d_cache = dres.cache
+            # chain the draft outputs into verify: exactly the real
+            # shapes/dtypes with zero bookkeeping
+            dlen = jax.device_put(np.full(n, L, np.int32))
+            vres, t_out = self._steps.verify(
+                self.t_params, t_kv, blank_pt, pending, dres.tokens,
+                dres.probs, dres.q_idx, dres.q_val, pos, dlen, key)
+            if paged:
+                self.t_cache = t_out
+            rows = jax.device_put(np.full(n, -1, np.int32))
+            skip = jax.device_put(np.ones(n, bool))
+            pend, tpos, dpos, emission = self._steps.commit(
+                state.pending, state.target_pos, state.draft_pos, rows,
+                skip, vres.output_tokens, vres.accept_counts)
+            state = StreamState(pending=pend, target_pos=tpos,
+                                draft_pos=dpos, committed=state.committed)
+            jax.block_until_ready((pend, emission))
+            info[(n, L)] = time.perf_counter() - t0
+        return state, info
+
+    # ------------------------------------------------------------------
 
     def _paged_views(self, B: int):
         """Per-round cache views: pools + page tables for rows [0, B)."""
         rows = range(B)
-        t = dict(self.t_cache, pages=jnp.asarray(self.t_pages.page_table(rows)))
-        d = dict(self.d_cache, pages=jnp.asarray(self.d_pages.page_table(rows)))
+        t = dict(self.t_cache, pages=self.t_pages.device_table(rows))
+        d = dict(self.d_cache, pages=self.d_pages.device_table(rows))
         return t, d
 
     # ------------------------------------------------------------------
@@ -408,13 +529,15 @@ class SpecEngine:
                 frz[i] = True
         L = max(int(lengths.max()), int(pad_to))
 
+        d_pt = None
         if paged:
-            tpos_np = np.asarray(state.target_pos)
-            dpos_np = np.asarray(state.draft_pos)
             # growth is clamped at the stream ceiling (window writes past
             # max_len drop — the contiguous slab's semantics) and atomic: a
             # pool-dry failure rolls every row back so the dispatch leaves
-            # the mappings untouched
+            # the mappings untouched.  Positions come from the host-side
+            # committed lists (invariant: target_pos == draft_pos ==
+            # len(committed) - 1 on every path), NOT from the device arrays
+            # — growing the mapping costs zero device reads.
             cap = self.pages_per_stream * self.page_size
             grown: list[tuple[int, int, int]] = []
             with _span("engine.page_alloc", {"B": n, "L": L}):
@@ -422,39 +545,55 @@ class SpecEngine:
                     for i, b in enumerate(row_list):
                         if frz[i]:
                             continue
+                        pos_b = len(state.committed[b]) - 1
                         grown.append((b, self.t_pages.length(b),
                                       self.d_pages.length(b)))
-                        self.t_pages.extend(b,
-                                            min(int(tpos_np[b]) + L + 1, cap))
-                        self.d_pages.extend(b,
-                                            min(int(dpos_np[b]) + L + 1, cap))
+                        self.t_pages.extend(b, min(pos_b + L + 1, cap))
+                        self.d_pages.extend(b, min(pos_b + L + 1, cap))
                 except PagePoolExhausted:
                     for b, t_len, d_len in grown:
                         self.t_pages.truncate(b, t_len)
                         self.d_pages.truncate(b, d_len)
                     raise
-            d_cache = dict(self.d_cache,
-                           pages=jnp.asarray(self.d_pages.page_table(row_list)))
-        else:
-            d_cache = self.d_cache
+            d_pt = self.d_pages.device_table(row_list)
 
         if full:
             pending, dpos, tpos = (state.pending, state.draft_pos,
                                    state.target_pos)
         else:
-            idx = jnp.asarray([max(b, 0) for b in row_list], jnp.int32)
-            live = jnp.asarray([b >= 0 for b in row_list])
-            pending = jnp.where(live, jnp.take(state.pending, idx), 0)
-            dpos = jnp.where(live, jnp.take(state.draft_pos, idx), 0)
-            tpos = jnp.where(live, jnp.take(state.target_pos, idx), 0)
+            idx = jax.device_put(
+                np.asarray([max(b, 0) for b in row_list], np.int32))
+            live = jax.device_put(np.asarray([b >= 0 for b in row_list]))
+            # the zero fill is device_put EXPLICITLY: a python-scalar 0 (or
+            # jnp.zeros, which embeds one) is an implicit h2d transfer and
+            # trips jax.transfer_guard("disallow") on the dispatch path
+            z = jax.device_put(np.zeros((), state.pending.dtype))
+            zi = jax.device_put(np.zeros((), np.int32))
+            pending = jnp.where(live, jnp.take(state.pending, idx), z)
+            dpos = jnp.where(live, jnp.take(state.draft_pos, idx), zi)
+            tpos = jnp.where(live, jnp.take(state.target_pos, idx), zi)
 
         # --- step 2: distributed drafting (SLM) ---
         with _span("engine.draft", {"B": n, "L": L}) as sp:
-            draft_res = generate_drafts(self.draft, self.d_params, d_cache,
-                                        pending, dpos, L, key, vhat=vhat)
+            if self._steps.draft is not None:
+                # compiled path: ONE jitted call per (n, L) bucket; the
+                # draft KV pytree is passed (and in jit+donate mode donated)
+                # as an argument, the page table rides un-donated
+                draft_res = self._steps.draft(self.d_params, self.d_cache,
+                                              d_pt, pending, dpos, key,
+                                              L=L, vhat=vhat)
+                self.d_cache = draft_res.cache
+                # the adopted cache must never be re-read through the
+                # ticket: the NEXT draft call donates it
+                draft_res = dataclasses.replace(draft_res, cache=None)
+            else:
+                d_cache = (dict(self.d_cache, pages=d_pt) if paged
+                           else self.d_cache)
+                draft_res = generate_drafts(self.draft, self.d_params,
+                                            d_cache, pending, dpos, L, key,
+                                            vhat=vhat)
+                self.d_cache = strip_view(draft_res.cache)
             sp.attach(draft_res.tokens)
-        self.d_cache = ({k: v for k, v in draft_res.cache.items()
-                         if k != "pages"} if paged else draft_res.cache)
         return RoundTicket(rows=None if full else row_list, lengths=lengths,
                            L=L, freeze=frz, pending=pending, target_pos=tpos,
                            draft=draft_res)
@@ -469,11 +608,25 @@ class SpecEngine:
         row_list = self._ticket_rows(ticket)
         n = len(row_list)
         draft_res = ticket.draft
-        if paged:
-            t_cache = dict(self.t_cache,
-                           pages=jnp.asarray(self.t_pages.page_table(row_list)))
-        else:
-            t_cache = self.t_cache
+        t_pt = self.t_pages.device_table(row_list) if paged else None
+        draft_len = jax.device_put(np.asarray(ticket.lengths, np.int32))
+
+        if self._steps.verify is not None:
+            # compiled path: the target pass AND the accept/reject run in
+            # one jitted call (per (n, L) bucket); the target KV pytree is
+            # donated in jit+donate mode, the page table rides un-donated
+            with _span("engine.target_pass",
+                       {"B": n, "W": ticket.L + 1}) as sp:
+                res, t_kv = self._steps.verify(
+                    self.t_params, self.t_cache, t_pt, ticket.pending,
+                    draft_res.tokens, draft_res.probs, draft_res.q_idx,
+                    draft_res.q_val, ticket.target_pos, draft_len, key)
+                self.t_cache = t_kv
+                sp.attach(res.accept_counts)
+            ticket.res = res
+            return ticket
+
+        t_cache = dict(self.t_cache, pages=t_pt) if paged else self.t_cache
 
         # --- step 4: batched verification (LLM) ---
         window = jnp.concatenate([ticket.pending[:, None], draft_res.tokens],
@@ -489,7 +642,6 @@ class SpecEngine:
                 snaps = None
             sp.attach(logits)
 
-        draft_len = jnp.asarray(ticket.lengths, jnp.int32)
         with _span("engine.verify_tokens", {"B": n, "L": ticket.L}) as sp:
             res = verify_drafts(key, draft_res.tokens, draft_res.probs,
                                 logits, q_idx=draft_res.q_idx,
@@ -502,8 +654,7 @@ class SpecEngine:
             sel = select_snapshots(snaps, res.accept_counts,
                                    self.target.CACHE_BATCH_AXES)
             t_cache = merge_snapshot_into_cache(t_cache, sel)
-        self.t_cache = ({k: v for k, v in t_cache.items() if k != "pages"}
-                        if paged else t_cache)
+        self.t_cache = strip_view(t_cache)
         ticket.res = res
         return ticket
 
@@ -511,15 +662,19 @@ class SpecEngine:
                     skip=None):
         """Land a verified ticket — THE host sync point of a round.
 
-        Blocks on the in-flight verification results, extends the committed
-        token lists, advances positions, and hands every page past the
-        accepted prefix back to the pool.  ``skip`` (aligned with the
-        ticket's rows) marks members that must NOT commit — streams retired
-        while the batch was in flight; rows retired through the engine and
-        ``-1`` padding rows are skipped automatically, so a mid-verify
-        disconnect never corrupts the rest of the batch.  Returns
-        ``(new_state, accepted)``: accepted counts incl. the bonus token,
-        0 for skipped/frozen rows, aligned with the ticket."""
+        The state arrays stay device-resident: a (jitted) ``commit_step``
+        scatter-updates ONLY the ticket's rows of pending/target_pos/
+        draft_pos on device (in ``jit+donate`` mode the old buffers are
+        donated into the new ones), and the single blocking fetch of the
+        round is the packed ``(n, L+2)`` emission — ``[advance, tokens...]``
+        per slot — that extends the host-side committed lists and drives
+        the page-pool truncation.  ``skip`` (aligned with the ticket's
+        rows) marks members that must NOT commit — streams retired while
+        the batch was in flight; rows retired through the engine and ``-1``
+        padding rows are skipped automatically, so a mid-verify disconnect
+        never corrupts the rest of the batch.  Returns ``(new_state,
+        accepted)``: accepted counts incl. the bonus token, 0 for
+        skipped/frozen rows, aligned with the ticket."""
         paged = self.cache_kind == "paged"
         row_list = self._ticket_rows(ticket)
         n = len(row_list)
@@ -531,30 +686,27 @@ class SpecEngine:
             if b < 0 or b in self._retired:
                 skip_np[i] = True
         with _span("engine.commit", {"B": n}):
-            out_np = np.asarray(res.output_tokens)   # the host sync point
-            n_np = np.asarray(res.accept_counts)
-            pend = np.asarray(state.pending).copy()
-            tpos = np.asarray(state.target_pos).copy()
-            dpos = np.asarray(state.draft_pos).copy()
-            accepted = np.zeros(n, dtype=np.int64)
+            rows_dev = jax.device_put(np.asarray(row_list, np.int32))
+            skip_dev = jax.device_put(skip_np)
+            pend, tpos, dpos, emission = self._steps.commit(
+                state.pending, state.target_pos, state.draft_pos, rows_dev,
+                skip_dev, res.output_tokens, res.accept_counts)
+            pack = self._host_fetch(emission)    # the ONE host sync
+            accepted = pack[:, 0].astype(np.int64)
             with _span("engine.page_free", {"B": n}):
                 for i, b in enumerate(row_list):
-                    if skip_np[i]:
+                    adv = int(pack[i, 0])
+                    if adv == 0:
                         continue
-                    k = int(n_np[i])
-                    accepted[i] = k + 1
-                    state.committed[b].extend(out_np[i, :k + 1].tolist())
-                    pend[b] = out_np[i, k]
-                    tpos[b] += k + 1
-                    dpos[b] += k + 1
+                    state.committed[b].extend(pack[i, 1:1 + adv].tolist())
                     if paged:
                         # speculative rejection hands pages straight back
-                        self.t_pages.truncate(b, int(tpos[b]))
-                        self.d_pages.truncate(b, int(dpos[b]))
-        new_state = StreamState(pending=jnp.asarray(pend),
-                                target_pos=jnp.asarray(tpos, jnp.int32),
-                                draft_pos=jnp.asarray(dpos, jnp.int32),
-                                committed=state.committed)
+                        new_len = len(state.committed[b]) - 1
+                        self.t_pages.truncate(b, new_len)
+                        self.d_pages.truncate(b, new_len)
+        self.last_accepted = accepted if ticket.rows is None else None
+        new_state = StreamState(pending=pend, target_pos=tpos,
+                                draft_pos=dpos, committed=state.committed)
         return new_state, accepted
 
     def spin_round(self, state: StreamState, lengths: np.ndarray,
@@ -655,10 +807,10 @@ class SpecEngine:
 
         paged = self.cache_kind == "paged"
         if paged:
-            tpos_np = np.asarray(state.target_pos)
-            dpos_np = np.asarray(state.draft_pos)
             # the TARGET maps the whole W+1 tree window up front; the draft
-            # side only ever holds one run (L+1) — repair fits under both
+            # side only ever holds one run (L+1) — repair fits under both.
+            # Positions come from the host-side committed lists (target_pos
+            # == draft_pos == len(committed) - 1), zero device reads.
             cap = self.pages_per_stream * self.page_size
             grown: list[tuple[int, int, int]] = []
             with _span("engine.page_alloc", {"B": B, "W": W}):
@@ -666,12 +818,11 @@ class SpecEngine:
                     for b in range(B):
                         if frz_np[b]:
                             continue
+                        pos_b = len(state.committed[b]) - 1
                         grown.append((b, self.t_pages.length(b),
                                       self.d_pages.length(b)))
-                        self.t_pages.extend(b,
-                                            min(int(tpos_np[b]) + W + 1, cap))
-                        self.d_pages.extend(b,
-                                            min(int(dpos_np[b]) + L + 1, cap))
+                        self.t_pages.extend(b, min(pos_b + W + 1, cap))
+                        self.d_pages.extend(b, min(pos_b + L + 1, cap))
                 except PagePoolExhausted:
                     for b, t_len, d_len in grown:
                         self.t_pages.truncate(b, t_len)
@@ -693,15 +844,18 @@ class SpecEngine:
 
         # --- pack into the prefix-deduplicated tree (host-side) ---
         with _span("engine.tree_build", {"B": B, "L": L, "J": J}):
-            ttree = build_token_tree(np.asarray(forest.tokens),
-                                     np.asarray(forest.probs),
-                                     np.asarray(forest.q_idx),
-                                     np.asarray(forest.q_val), lengths)
-            window = jnp.asarray(
-                ttree.window_tokens(np.asarray(state.pending)),
-                jnp.int32)                                     # (B, W+1)
-            wmask = jnp.asarray(ttree.window_mask())
-            wdepth = jnp.asarray(ttree.window_depth(), jnp.int32)
+            # ONE batched fetch for everything the host-side trie build
+            # needs, into (J, L)-bucketed scratch buffers reused across
+            # rounds instead of 8 fresh allocations per call
+            tok_np, p_np, qi_np, qv_np, pend_np = self._host_fetch(
+                (forest.tokens, forest.probs, forest.q_idx, forest.q_val,
+                 state.pending))
+            ttree = build_token_tree(tok_np, p_np, qi_np, qv_np, lengths,
+                                     scratch=self._tree_scratch)
+            window = jax.device_put(
+                ttree.window_tokens(pend_np).astype(np.int32))  # (B, W+1)
+            wmask = jax.device_put(ttree.window_mask())
+            wdepth = jax.device_put(ttree.window_depth().astype(np.int32))
 
         # --- step 4: ONE ancestor-masked target pass over the whole tree ---
         with _span("engine.target_pass", {"B": B, "W": W + 1, "J": J}) as sp:
@@ -759,7 +913,7 @@ class SpecEngine:
             # repair forward (kept as the reference path, and for targets
             # whose window pass cannot donate K/V): one plain causal window
             # over [pending, accepted path] rewrites the surviving slots
-            n_max = int(np.asarray(res.accept_counts).max())
+            n_max = int(self._host_fetch(res.accept_counts).max())
             repair = jnp.concatenate(
                 [state.pending[:, None], res.output_tokens[:, :n_max]],
                 axis=1)                                        # (B, n_max+1)
@@ -769,10 +923,8 @@ class SpecEngine:
                 _, d_cache = self.draft.forward_window(
                     self.d_params, repair, d_cache, state.draft_pos)
                 sp.attach(t_cache)
-        self.t_cache = {k: v for k, v in t_cache.items() if k != "pages"} \
-            if paged else t_cache
-        self.d_cache = {k: v for k, v in d_cache.items() if k != "pages"} \
-            if paged else d_cache
+        self.t_cache = strip_view(t_cache)
+        self.d_cache = strip_view(d_cache)
 
         # --- step 5b: commit + rollback (identical to the sequential round)
         adv = jnp.where(frz, 0, 1 + res.accept_counts)
@@ -782,8 +934,12 @@ class SpecEngine:
             res.output_tokens, res.accept_counts[:, None], axis=1)[:, 0]
         new_pending = jnp.where(frz, state.pending, sampled)
 
-        out_np = np.asarray(res.output_tokens)
-        n_np = np.asarray(res.accept_counts)
+        # one batched fetch lands the commit on the host (tokens + counts;
+        # positions for the page truncation ride along for free)
+        out_np, n_np, ntp, ndp = self._host_fetch(
+            (res.output_tokens, res.accept_counts, new_target_pos,
+             new_draft_pos))
+        self.last_accepted = np.where(frz_np, 0, n_np + 1).astype(np.int64)
         for b in range(B):
             if not frz_np[b]:
                 state.committed[b].extend(out_np[b, :n_np[b] + 1].tolist())
@@ -791,7 +947,6 @@ class SpecEngine:
         if paged:
             # every page past the accepted prefix — all dead branches of the
             # tree — returns to the pool here
-            ntp, ndp = np.asarray(new_target_pos), np.asarray(new_draft_pos)
             with _span("engine.page_free", {"B": B}):
                 for b in range(B):
                     if not frz_np[b]:
